@@ -1,0 +1,59 @@
+"""Communication-cost table (the paper's §V efficiency claim, quantified).
+
+Per-round bytes for flat FedAvg vs the hierarchical coalition schedule, for
+the paper's CNN and every assigned architecture.
+
+  PYTHONPATH=src python -m benchmarks.comm_cost
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import ARCHS
+from repro.core import aggregation
+from repro.models.cnn import CNNConfig
+
+
+def _cnn_params() -> int:
+    return 582_026          # conv1+conv2+fc1+fc2 (test-pinned)
+
+
+def table(n_clients: int = 10, k: int = 3, bytes_per_param: int = 4) -> list[dict]:
+    rows = []
+    entries = [("paper-cnn", _cnn_params())]
+    entries += [(name, cfg.n_params()) for name, cfg in ARCHS.items()]
+    for name, d in entries:
+        flat = aggregation.comm_fedavg(n_clients, d, bytes_per_param)
+        hier = aggregation.comm_coalition(n_clients, k, d, bytes_per_param)
+        rows.append({
+            "model": name, "params": d,
+            "fedavg_wan_up_MB": flat.wan_up / 1e6,
+            "coalition_wan_up_MB": hier.wan_up / 1e6,
+            "coalition_edge_up_MB": hier.edge_up / 1e6,
+            "wan_savings_x": aggregation.wan_savings(n_clients, k),
+        })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clients", type=int, default=10)
+    ap.add_argument("--coalitions", type=int, default=3)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = table(args.clients, args.coalitions)
+    hdr = f"{'model':26s} {'params':>14s} {'fedavg WAN↑':>12s} {'coal WAN↑':>12s} {'savings':>8s}"
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['model']:26s} {r['params']:>14,} "
+              f"{r['fedavg_wan_up_MB']:>10.1f}MB {r['coalition_wan_up_MB']:>10.1f}MB "
+              f"{r['wan_savings_x']:>7.2f}x")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Reproduction of the paper's Figs. 2-4: FedAvg vs FL-with-Coalitions
+accuracy per communication round under IID / heterogeneous (Dirichlet) /
+highly-heterogeneous (2-shard) client splits.
+
+Offline container: the MNIST surrogate from repro.data.synthetic stands in for
+MNIST (DESIGN.md §4); real idx files are used automatically if present.
+
+  PYTHONPATH=src python -m benchmarks.paper_figures --rounds 20 --out figs.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.client import ClientConfig
+from repro.core.server import FederationConfig, run_federation
+from repro.data import loader, partition, synthetic
+from repro.models import cnn
+
+REGIMES = {"iid": "Fig. 2 (homogeneous)",
+           "dirichlet": "Fig. 3 (heterogeneous)",
+           "shard": "Fig. 4 (highly heterogeneous)"}
+
+
+def ascii_plot(series: dict[str, list[float]], width: int = 60,
+               height: int = 12) -> str:
+    all_v = [v for s in series.values() for v in s]
+    lo, hi = min(all_v), max(all_v)
+    rows = []
+    marks = {}
+    for ci, (name, s) in enumerate(sorted(series.items())):
+        ch = name[0].upper()
+        n = len(s)
+        for r in range(height):
+            for x in range(width):
+                i = min(int(x / width * n), n - 1)
+                y = (s[i] - lo) / (hi - lo + 1e-9)
+                if int(y * (height - 1)) == height - 1 - r:
+                    marks.setdefault((r, x), ch)
+    for r in range(height):
+        row = "".join(marks.get((r, x), " ") for x in range(width))
+        rows.append(f"{hi - (hi - lo) * r / (height - 1):5.2f} |{row}")
+    rows.append("      +" + "-" * width)
+    return "\n".join(rows)
+
+
+def run_regime(regime: str, *, rounds: int, n_train: int, n_test: int,
+               clients: int, coalitions: int, local_epochs: int,
+               batch_size: int, lr: float, seed: int,
+               alpha: float = 0.5) -> dict:
+    data = synthetic.mnist_idx()
+    source = "mnist-idx" if data is not None else "synthetic-digits"
+    if data is None:
+        data = (synthetic.digits(n_train, seed=seed),
+                synthetic.digits(n_test, seed=seed + 1))
+    (xtr, ytr), (xte, yte) = data
+    xtr, ytr = xtr[:n_train], ytr[:n_train]
+    xte, yte = jnp.asarray(xte[:n_test]), jnp.asarray(yte[:n_test])
+
+    kw = {"alpha": alpha} if regime == "dirichlet" else {}
+    idx = partition.partition(regime, ytr, clients, seed=seed, **kw)
+    cd = jax.tree.map(jnp.asarray, loader.client_datasets(xtr, ytr, idx))
+    out = {"regime": regime, "figure": REGIMES[regime], "source": source,
+           "label_histogram": loader.label_histogram(ytr, idx).tolist()}
+    for method in ("fedavg", "coalition"):
+        cfg = FederationConfig(
+            n_clients=clients, n_coalitions=coalitions, rounds=rounds,
+            method=method,
+            client=ClientConfig(epochs=local_epochs, batch_size=batch_size,
+                                lr=lr))
+        params = cnn.init(jax.random.key(seed))
+        t0 = time.time()
+        hist = run_federation(params, cnn.loss_fn,
+                              lambda p: cnn.accuracy(p, xte, yte),
+                              cd, jax.random.key(seed + 1), cfg)
+        out[method] = {"test_acc": hist.test_acc,
+                       "train_loss": hist.train_loss,
+                       "final_counts": hist.counts[-1],
+                       "wall_s": round(time.time() - t0, 1)}
+    out["final_gap"] = (out["coalition"]["test_acc"][-1]
+                        - out["fedavg"]["test_acc"][-1])
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=15)
+    ap.add_argument("--clients", type=int, default=10)
+    ap.add_argument("--coalitions", type=int, default=3)
+    ap.add_argument("--local-epochs", type=int, default=2)
+    ap.add_argument("--batch-size", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--n-train", type=int, default=10000)
+    ap.add_argument("--n-test", type=int, default=2000)
+    ap.add_argument("--alpha", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--regime", default=None, choices=list(REGIMES))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    regimes = [args.regime] if args.regime else list(REGIMES)
+    results = []
+    for regime in regimes:
+        r = run_regime(regime, rounds=args.rounds, n_train=args.n_train,
+                       n_test=args.n_test, clients=args.clients,
+                       coalitions=args.coalitions,
+                       local_epochs=args.local_epochs,
+                       batch_size=args.batch_size, lr=args.lr,
+                       seed=args.seed, alpha=args.alpha)
+        results.append(r)
+        print(f"\n=== {r['figure']} [{r['source']}] ===")
+        print(ascii_plot({"Fedavg": r["fedavg"]["test_acc"],
+                          "Coalition": r["coalition"]["test_acc"]}))
+        print(f"final: fedavg={r['fedavg']['test_acc'][-1]:.3f} "
+              f"coalition={r['coalition']['test_acc'][-1]:.3f} "
+              f"gap={r['final_gap']:+.3f}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,208 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# Must precede any jax import (device count locks at backend init).
+
+"""Roofline table: per (arch x shape) on the single-pod 16x16 mesh.
+
+XLA's cost model counts a while-loop body ONCE regardless of trip count, so
+lowering the full scan-over-layers program under-reports FLOPs/bytes by ~L.
+We therefore lower each combo twice with UNROLLED layer stacks (L=1 and L=2,
+all other dims at full scale) and extrapolate linearly:
+
+    v(L) = v(1) + (v(2) - v(1)) * (L - 1)
+
+exact for identical layers (embeddings/head costs live in the base term).
+Residual caveat (documented in EXPERIMENTS.md): costs *inside* the SSM
+time-chunk scan and the attention softmax inner loops are still single-count;
+those are register/VMEM-resident in a fused kernel, so excluding them from the
+HBM term matches the fused-kernel reality.
+
+  PYTHONPATH=src python -m benchmarks.roofline --all --out roofline.jsonl
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED, get, input_specs
+from repro.configs.shapes import SHAPES, applicable
+from repro.launch import analysis, sharding, steps
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tf
+
+
+def _lower_cost(cfg, shape_name, *, optimizer="sgd", remat=True,
+                mesh=None, moe_expert_axis="data", ring=False) -> dict:
+    """Per-device flops/bytes/collective-bytes for one lowering."""
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape_name, ring=ring)
+    params_shape = jax.eval_shape(lambda: tf.init(jax.random.key(0), cfg))
+    pspecs = sharding.param_specs(mesh, params_shape,
+                                  moe_expert_axis=moe_expert_axis)
+    params_sds = sharding.attach(pspecs, params_shape, mesh)
+    with mesh:
+        if shape.kind == "train":
+            step, opt = steps.make_train_step(cfg, optimizer=optimizer,
+                                              remat=remat)
+            opt_shape = jax.eval_shape(opt.init, params_shape)
+            opt_sds = sharding.attach(
+                sharding.opt_state_specs(mesh, opt_shape, pspecs, params_shape,
+                                         moe_expert_axis=moe_expert_axis),
+                opt_shape, mesh)
+            batch_sds = sharding.attach(
+                sharding.batch_specs(mesh, specs["batch"]), specs["batch"], mesh)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                params_sds, opt_sds, batch_sds)
+        elif shape.kind == "prefill":
+            step = steps.make_prefill_step(cfg)
+            batch_sds = sharding.attach(
+                sharding.batch_specs(mesh, specs["batch"]), specs["batch"], mesh)
+            cache_sds = sharding.attach(
+                sharding.cache_specs(mesh, specs["cache"]), specs["cache"], mesh)
+            lowered = jax.jit(step, donate_argnums=(2,)).lower(
+                params_sds, batch_sds, cache_sds)
+        else:
+            step = steps.make_decode_step(cfg)
+            tok_sds = sharding.attach(
+                sharding.batch_specs(mesh, specs["token"]), specs["token"], mesh)
+            cache_sds = sharding.attach(
+                sharding.cache_specs(mesh, specs["cache"]), specs["cache"], mesh)
+            lowered = jax.jit(step, donate_argnums=(2,)).lower(
+                params_sds, tok_sds, cache_sds)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    coll = analysis.collective_bytes(compiled.as_text())
+    mem = analysis.memory_stats(compiled)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll": float(coll["total"]),
+        "coll_by_kind": {k: v for k, v in coll.items() if v and k != "total"},
+        "temp_bytes": float(mem.get("temp_size_in_bytes", 0)),
+        "arg_bytes": float(mem.get("argument_size_in_bytes", 0)),
+    }
+
+
+def measure_combo(arch: str, shape_name: str, *, optimizer="sgd", remat=True,
+                  cfg_override=None, tag="baseline", verbose=True,
+                  moe_expert_axis="data", ring=False, ep=False) -> dict:
+    cfg = cfg_override or get(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": "16x16", "tag": tag}
+    ok, reason = applicable(cfg, shape_name)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=False)
+    chips = mesh.devices.size
+
+    old_unroll = tf.LAYER_SCAN_UNROLL
+    tf.LAYER_SCAN_UNROLL = True
+    if ep:
+        from repro.models import moe as moe_mod
+
+        moe_mod.enable_expert_parallel(mesh, token_axes=("data",),
+                                       expert_axis="data",
+                                       model_axis="model")
+    try:
+        vs = {}
+        for L in (1, 2):
+            cl = dataclasses.replace(
+                cfg, n_layers=L,
+                n_enc_layers=(L if cfg.enc_dec else cfg.n_enc_layers and L))
+            vs[L] = _lower_cost(cl, shape_name, optimizer=optimizer,
+                                remat=remat, mesh=mesh,
+                                moe_expert_axis=moe_expert_axis, ring=ring)
+    finally:
+        tf.LAYER_SCAN_UNROLL = old_unroll
+        if ep:
+            from repro.models import moe as moe_mod
+
+            moe_mod.disable_expert_parallel()
+
+    L = cfg.n_layers
+
+    def extrap(key):
+        return vs[1][key] + (vs[2][key] - vs[1][key]) * (L - 1)
+
+    flops_dev = extrap("flops")
+    bytes_dev = extrap("bytes")
+    coll_dev = extrap("coll")
+    compute_s = flops_dev / analysis.PEAK_FLOPS
+    memory_s = bytes_dev / analysis.HBM_BW
+    collective_s = coll_dev / analysis.ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    mf = analysis.model_flops(cfg, shape)
+    rec.update(
+        status="ok", chips=chips,
+        flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+        collective_bytes_per_device=coll_dev,
+        coll_by_kind_L2=vs[2]["coll_by_kind"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=max(terms, key=terms.get),
+        model_flops_global=mf,
+        hlo_flops_global=flops_dev * chips,
+        useful_ratio=mf / (flops_dev * chips) if flops_dev else 0.0,
+        temp_bytes_extrap=extrap("temp_bytes"),
+        arg_bytes_extrap=extrap("arg_bytes"),
+        wall_s=round(time.time() - t0, 1),
+    )
+    if verbose:
+        print(f"{tag:>10s} {arch:24s} {shape_name:12s} "
+              f"C={compute_s:.3e} M={memory_s:.3e} X={collective_s:.3e} "
+              f"bottleneck={rec['bottleneck']:<10s} useful={rec['useful_ratio']:.3f} "
+              f"({rec['wall_s']}s)", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--optimizer", default="sgd")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--moe-expert-axis", default="data",
+                    choices=["data", "model"],
+                    help="MoE placement: FSDP over data vs expert-parallel "
+                         "over model (see EXPERIMENTS.md §Perf)")
+    ap.add_argument("--ring", action="store_true",
+                    help="sliding-window ring-buffer KV cache for decode")
+    ap.add_argument("--ep", action="store_true",
+                    help="shard_map expert-parallel MoE (all_to_all dispatch)")
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    tag = args.tag or ("baseline" if args.moe_expert_axis == "data"
+                       and not args.ring and not args.ep else "tuned")
+    combos = ([(a, s) for a in ASSIGNED for s in SHAPES] if args.all
+              else [(args.arch, args.shape)])
+    records = []
+    for arch, shp in combos:
+        try:
+            records.append(measure_combo(arch, shp, optimizer=args.optimizer,
+                                         remat=not args.no_remat, tag=tag,
+                                         moe_expert_axis=args.moe_expert_axis,
+                                         ring=args.ring, ep=args.ep))
+        except Exception as e:
+            traceback.print_exc()
+            records.append({"arch": arch, "shape": shp, "status": "error",
+                            "error": f"{type(e).__name__}: {e}"})
+    if args.out:
+        with open(args.out, "a") as f:
+            for r in records:
+                f.write(json.dumps(r, default=float) + "\n")
+    n_ok = sum(r.get("status") == "ok" for r in records)
+    n_skip = sum(r.get("status") == "skipped" for r in records)
+    print(f"\nroofline summary: {n_ok} ok, {n_skip} skipped, "
+          f"{len(records) - n_ok - n_skip} errors")
+
+
+if __name__ == "__main__":
+    main()

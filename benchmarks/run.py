@@ -1,0 +1,140 @@
+"""Benchmark harness — one entry per paper table/figure plus kernel
+microbenchmarks.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick suite (CPU)
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale figures
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, reps: int = 5) -> float:
+    fn(*args)                                    # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_coalition_round() -> tuple[float, float]:
+    """Algorithm 1 server step at the paper's scale (N=10, D=582k)."""
+    from repro.core import coalitions
+
+    w = jax.random.normal(jax.random.key(0), (10, 582_026), jnp.float32)
+    state = coalitions.init_centers(jax.random.key(1), w, 3)
+    fn = jax.jit(lambda w_, s: coalitions.run_round(w_, s).theta)
+    us = _timeit(fn, w, state)
+    return us, float(jnp.sum(fn(w, state)))
+
+
+def bench_pairwise_kernel() -> tuple[float, float]:
+    from repro.kernels import ops, ref
+
+    w = jax.random.normal(jax.random.key(0), (10, 582_026), jnp.float32)
+    us = _timeit(ops.pairwise_sq_dists, w)
+    err = float(jnp.max(jnp.abs(ops.pairwise_sq_dists(w)
+                                - ref.pairwise_sq_dists(w))))
+    rel = err / float(jnp.max(ref.pairwise_sq_dists(w)))
+    return us, rel
+
+
+def bench_segment_sum() -> tuple[float, float]:
+    from repro.kernels import ops, ref
+
+    oh = jax.nn.one_hot(jax.random.randint(jax.random.key(1), (10,), 0, 3), 3).T
+    w = jax.random.normal(jax.random.key(0), (10, 582_026), jnp.float32)
+    us = _timeit(ops.segment_sum, oh, w)
+    err = float(jnp.max(jnp.abs(ops.segment_sum(oh, w) - ref.segment_sum(oh, w))))
+    return us, err
+
+
+def bench_flash_attention() -> tuple[float, float]:
+    from repro.kernels import ops, ref
+
+    q = jax.random.normal(jax.random.key(0), (1, 8, 256, 64), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (1, 2, 256, 64), jnp.float32)
+    us = _timeit(lambda: ops.flash_attention(q, k, v))
+    err = float(jnp.max(jnp.abs(ops.flash_attention(q, k, v)
+                                - ref.attention(q, k, v))))
+    return us, err
+
+
+def bench_fig(regime: str, full: bool) -> tuple[float, float]:
+    from benchmarks.paper_figures import run_regime
+
+    kw = (dict(rounds=15, n_train=10000, n_test=2000, local_epochs=2)
+          if full else dict(rounds=5, n_train=3000, n_test=600,
+                            local_epochs=1))
+    t0 = time.perf_counter()
+    r = run_regime(regime, clients=10, coalitions=3, batch_size=10, lr=0.05,
+                   seed=0, **kw)
+    us_per_round = (time.perf_counter() - t0) / kw["rounds"] * 1e6
+    return us_per_round, r["final_gap"]
+
+
+def bench_comm_cost() -> tuple[float, float]:
+    from benchmarks.comm_cost import table
+
+    t0 = time.perf_counter()
+    rows = table()
+    return (time.perf_counter() - t0) * 1e6, rows[0]["wan_savings_x"]
+
+
+def bench_decode_throughput() -> tuple[float, float]:
+    from repro.configs import get, reduced
+    from repro.models import transformer as tf
+
+    cfg = reduced(get("starcoder2-7b"))
+    params = tf.init(jax.random.key(0), cfg)
+    cache = tf.init_cache(cfg, 4, 64)
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (4, 16), 0,
+                                          cfg.vocab)}
+    _, cache = tf.prefill(params, cfg, batch, cache)
+    tok = jnp.zeros((4,), jnp.int32)
+    fn = jax.jit(lambda p, t, c: tf.decode_step(p, cfg, t, c)[0])
+    us = _timeit(fn, params, tok, cache)
+    return us, 4.0 / (us / 1e6)                  # tokens/s
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale figure runs (slow)")
+    ap.add_argument("--skip-figs", action="store_true")
+    args = ap.parse_args()
+
+    benches = [
+        ("coalition_round_n10_d582k", bench_coalition_round),
+        ("kernel_pairwise_dist", bench_pairwise_kernel),
+        ("kernel_segment_sum", bench_segment_sum),
+        ("kernel_flash_attention", bench_flash_attention),
+        ("comm_cost_table", bench_comm_cost),
+        ("decode_step_reduced", bench_decode_throughput),
+    ]
+    if not args.skip_figs:
+        benches += [
+            ("fig2_iid_gap", lambda: bench_fig("iid", args.full)),
+            ("fig3_dirichlet_gap", lambda: bench_fig("dirichlet", args.full)),
+            ("fig4_shard_gap", lambda: bench_fig("shard", args.full)),
+        ]
+
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        try:
+            us, derived = fn()
+            print(f"{name},{us:.1f},{derived:.6f}", flush=True)
+        except Exception as e:  # pragma: no cover
+            print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro — production-grade JAX framework reproducing "Efficient
+Collaborations through Weight-Driven Coalition Dynamics in Federated Learning
+Systems" (El Hanjri et al., 2024), with a multi-pod TPU-target runtime."""
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpoint import (latest_step, restore, save,
+                                         save_federation)
+
+__all__ = ["save", "restore", "latest_step", "save_federation"]

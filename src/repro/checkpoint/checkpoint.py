@@ -1,0 +1,100 @@
+"""npz-based pytree checkpointing with structure + sharding metadata.
+
+Layout: ``<dir>/step_<n>/arrays.npz`` + ``meta.json`` (treedef, dtypes,
+optional PartitionSpec strings so a restored checkpoint can be re-sharded on a
+different mesh).  No orbax in this container; this covers the framework's
+needs: atomic save, latest-step discovery, federation snapshots (global model
++ coalition state + round).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_names(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":
+            # ml_dtypes (bfloat16, fp8; numpy kind 'V') are not
+            # npz-serialisable; store as float32 (lossless widening) —
+            # restore() casts back via the template's dtype.
+            import jax.numpy as jnp
+
+            arr = np.asarray(jnp.asarray(leaf).astype(jnp.float32))
+        flat[name] = arr
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree,
+         extra_meta: dict | None = None) -> str:
+    """Atomically save a pytree checkpoint.  Returns the step directory."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir if os.path.isdir(ckpt_dir) else None)
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten_with_names(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    treedef = jax.tree.structure(tree)
+    meta = {
+        "step": step,
+        "treedef": str(treedef),
+        "names": sorted(flat),
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        **(extra_meta or {}),
+    }
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.replace(tmp, step_dir)
+    return step_dir
+
+
+def restore(ckpt_dir: str, like: PyTree, step: int | None = None) -> PyTree:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    arrays = np.load(os.path.join(step_dir, "arrays.npz"))
+    flat_like = _flatten_with_names(like)
+    missing = set(flat_like) - set(arrays.files)
+    if missing:
+        raise KeyError(f"checkpoint missing leaves: {sorted(missing)[:5]}...")
+    leaves_like, treedef = jax.tree.flatten(like)
+    names = list(_flatten_with_names(like))
+    # tree_flatten_with_path and tree_flatten agree on leaf order; cast via
+    # jnp (numpy lacks cast kernels for ml_dtypes like bfloat16)
+    import jax.numpy as jnp
+
+    restored = [jnp.asarray(arrays[n]).astype(l.dtype)
+                for n, l in zip(names, leaves_like)]
+    return jax.tree.unflatten(treedef, restored)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def save_federation(ckpt_dir: str, round_: int, global_params: PyTree,
+                    coal_state, history: dict | None = None) -> str:
+    """Federation snapshot: global model + coalition centers + history."""
+    tree = {"global": global_params,
+            "centers": coal_state.center_idx,
+            "round": coal_state.round}
+    return save(ckpt_dir, round_, tree, extra_meta={"history": history or {}})

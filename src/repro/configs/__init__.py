@@ -1,0 +1,5 @@
+from repro.configs.registry import ARCHS, ASSIGNED, EXTRA_ARCHS, get, reduced
+from repro.configs.shapes import SHAPES, applicable, input_specs
+
+__all__ = ["ARCHS", "ASSIGNED", "EXTRA_ARCHS", "get", "reduced", "SHAPES",
+           "applicable", "input_specs"]

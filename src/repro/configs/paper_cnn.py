@@ -1,0 +1,4 @@
+"""The paper's own model (§IV.D): MNIST CNN for the federated experiments."""
+from repro.models.cnn import CNNConfig
+
+CONFIG = CNNConfig()

@@ -1,0 +1,92 @@
+"""The four assigned input shapes and ShapeDtypeStruct input factories.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every input of the corresponding step function — no device
+allocation, shardable, exactly the pattern the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+class InputShape(NamedTuple):
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Token (+ modal) batch stand-ins for train/prefill."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": _sds((b, s), jnp.int32)}
+    if cfg.modality:
+        specs["modal"] = _sds((b, cfg.n_modal_tokens, cfg.d_modal), cfg.dtype)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, *,
+                ring: bool = False) -> dict:
+    """Decode-cache stand-ins sized to the shape's seq_len (+ the modal
+    prefix for decoder-only VLMs, whose patch embeddings occupy cache slots).
+    ``ring=True``: sliding-window ring buffer (window-sized KV)."""
+    max_len = shape.seq_len
+    if cfg.modality and not cfg.enc_dec:
+        max_len += cfg.n_modal_tokens
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, shape.global_batch, max_len,
+                                       ring=ring))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, *,
+                ring: bool = False) -> dict:
+    """All inputs for the (arch, shape) step function, as ShapeDtypeStructs.
+
+    train:    {'batch': {...}}
+    prefill:  {'batch': {...}, 'cache': {...}}
+    decode:   {'token': (B,), 'cache': {...}}
+
+    ``ring=True`` swaps decode caches for sliding-window ring buffers
+    (windowed archs only; no-op otherwise).
+    """
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape), "cache": cache_specs(cfg, shape)}
+    specs = {"token": _sds((shape.global_batch,), jnp.int32),
+             "cache": cache_specs(cfg, shape, ring=ring)}
+    if cfg.enc_dec:
+        pass  # encoder memory lives inside the cache
+    return specs
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """Whether this (arch, shape) pair runs, per DESIGN.md §Arch-applicability."""
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k":
+        subquadratic = cfg.ssm or cfg.hybrid or cfg.window is not None
+        if not subquadratic:
+            return False, ("full-attention arch: 524k decode requires "
+                           "sub-quadratic attention (see DESIGN.md)")
+    if cfg.enc_dec and shape.kind == "train" and shape.seq_len > 8192:
+        return True, ""
+    return True, ""

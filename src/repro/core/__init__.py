@@ -1,0 +1,14 @@
+"""repro.core — the paper's contribution: weight-driven coalition dynamics.
+
+Public API:
+  distance.pairwise_dists / sq_dists_to_points   (§III.A)
+  barycenter.barycenters / medoids               (§III.B, Step III)
+  coalitions.init_centers / run_round            (Algorithm 1)
+  aggregation.fedavg / coalition_round / comm_*  (baseline + comm accounting)
+  client.client_update, server.run_federation    (orchestration)
+"""
+from repro.core import (aggregation, barycenter, client, coalitions, distance,
+                        pytree, server)
+
+__all__ = ["aggregation", "barycenter", "client", "coalitions", "distance",
+           "pytree", "server"]

@@ -1,0 +1,69 @@
+"""ClientUpdate — local training on a client's private shard (paper §IV.E).
+
+The paper's protocol: each communication round, every client runs E=5 local
+epochs of SGD with batch size 10 starting from the broadcast global model.
+Implemented as a fully-jitted ``lax.scan`` over shuffled minibatches so that a
+vmap over the client axis yields the whole federation's local phase as one
+XLA program (client-parallel over the mesh ``data`` axis at scale).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import optimizers as opt_mod
+
+PyTree = Any
+
+
+class ClientConfig(NamedTuple):
+    epochs: int = 5
+    batch_size: int = 10
+    lr: float = 0.01
+    momentum: float = 0.0
+
+
+def client_update(loss_fn: Callable[[PyTree, PyTree], jax.Array],
+                  params: PyTree,
+                  data: PyTree,
+                  key: jax.Array,
+                  cfg: ClientConfig) -> tuple[PyTree, jax.Array]:
+    """Run E local epochs of minibatch SGD from ``params`` on ``data``.
+
+    Args:
+      loss_fn: (params, batch) -> scalar loss.
+      data: pytree of arrays with identical leading dim n_local
+        (e.g. {'x': (n, 28, 28, 1), 'y': (n,)}).
+      key: PRNG key for per-epoch shuffling.
+
+    Returns:
+      (new_params, mean_final_epoch_loss)
+    """
+    n = jax.tree.leaves(data)[0].shape[0]
+    bs = cfg.batch_size
+    steps_per_epoch = n // bs
+    opt = opt_mod.sgd(cfg.lr, momentum=cfg.momentum)
+    opt_state = opt.init(params)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def epoch(carry, ekey):
+        params, opt_state = carry
+        perm = jax.random.permutation(ekey, n)[: steps_per_epoch * bs]
+        batches = jax.tree.map(
+            lambda a: a[perm].reshape((steps_per_epoch, bs) + a.shape[1:]), data)
+
+        def step(carry, batch):
+            params, opt_state = carry
+            loss, grads = grad_fn(params, batch)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = opt_mod.apply_updates(params, updates)
+            return (params, opt_state), loss
+
+        (params, opt_state), losses = jax.lax.scan(step, (params, opt_state), batches)
+        return (params, opt_state), jnp.mean(losses)
+
+    ekeys = jax.random.split(key, cfg.epochs)
+    (params, _), epoch_losses = jax.lax.scan(epoch, (params, opt_state), ekeys)
+    return params, epoch_losses[-1]

@@ -1,0 +1,118 @@
+"""Algorithm 1 — Federated Learning with Coalition Formation based on
+Euclidean Distance between Weights (paper §III.C).
+
+The whole round is a single jittable program over the ``(N, D)`` client weight
+matrix:
+
+  Step I   ``init_centers``      — K random distinct clients (pairwise d > 0)
+  Step II  ``assign``            — nearest-center assignment (centers keep
+                                   their own coalition)
+  Step III ``barycenters`` +     — segment-mean then medoid center update
+           ``medoids``
+  Step IV  ``global_aggregate``  — θ = mean of coalition barycenters
+
+``CoalitionState`` carries the center indices across rounds, mirroring the
+paper's v_j^r recurrence.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import barycenter as bary_mod
+from repro.core import distance
+
+
+class CoalitionState(NamedTuple):
+    """Per-round coalition bookkeeping (a pytree; safe to carry through scan)."""
+
+    center_idx: jax.Array     # (K,) int32 — indices v_j^r of center clients
+    round: jax.Array          # () int32
+
+
+class CoalitionRound(NamedTuple):
+    """Everything Algorithm 1 produces in one global round."""
+
+    assignment: jax.Array     # (N,) int32 coalition id per client
+    barycenters: jax.Array    # (K, D) float32 b_j^r
+    counts: jax.Array         # (K,) member counts |C_j|
+    new_center_idx: jax.Array # (K,) int32 v_j^{r+1}
+    theta: jax.Array          # (D,) float32 global model θ^{(r)}
+    state: CoalitionState
+
+
+def init_centers(key: jax.Array, w: jax.Array, k: int) -> CoalitionState:
+    """Step I: choose K random distinct clients as initial centers.
+
+    The paper requires d(ω_{v_j}, ω_{v_j'}) > 0 for all pairs.  We walk a
+    random permutation and greedily accept clients whose weights differ from
+    every already-accepted center — identical to the paper's rejection rule
+    but total (falls back to duplicates only if fewer than K distinct weight
+    vectors exist at all).
+    """
+    n = w.shape[0]
+    perm = jax.random.permutation(key, n)
+    d2 = distance.pairwise_sq_dists(w)                    # (N, N)
+
+    def body(i, carry):
+        sel, cnt = carry                                  # sel: (K,) idx, cnt: ()
+        cand = perm[i]
+        # distance from candidate to each already-selected center
+        dist_to_sel = d2[cand, sel]                       # (K,)
+        taken = jnp.arange(sel.shape[0]) < cnt
+        ok = jnp.all(jnp.where(taken, dist_to_sel > 0.0, True))
+        do_take = jnp.logical_and(ok, cnt < sel.shape[0])
+        sel = jnp.where(
+            jnp.logical_and(do_take, jnp.arange(sel.shape[0]) == cnt),
+            cand, sel)
+        cnt = cnt + do_take.astype(jnp.int32)
+        return sel, cnt
+
+    sel0 = perm[:k].astype(jnp.int32)  # fallback: first K of the permutation
+    sel, cnt = jax.lax.fori_loop(0, n, body, (sel0, jnp.int32(0)))
+    sel = jnp.where(cnt == k, sel, perm[:k].astype(jnp.int32))
+    return CoalitionState(center_idx=sel.astype(jnp.int32), round=jnp.int32(0))
+
+
+def assign(w: jax.Array, center_idx: jax.Array, *, backend: str = "xla") -> jax.Array:
+    """Step II: each client joins the coalition with the nearest center.
+
+    Center clients are pinned to their own coalition (the paper iterates over
+    ``U \\ {v_j}``; a center is trivially at distance 0 from itself, so the
+    pin only matters for exact ties between duplicate weights).
+    """
+    centers = w[center_idx]                               # (K, D)
+    d2 = distance.sq_dists_to_points(w, centers, backend=backend)  # (N, K)
+    a = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    # pin centers to their own coalition id
+    k = center_idx.shape[0]
+    n = w.shape[0]
+    pin = jnp.full((n,), -1, jnp.int32).at[center_idx].set(jnp.arange(k, dtype=jnp.int32))
+    return jnp.where(pin >= 0, pin, a)
+
+
+def run_round(w: jax.Array, state: CoalitionState, *, backend: str = "xla",
+              client_weights: jax.Array | None = None) -> CoalitionRound:
+    """One full Algorithm-1 server round over fresh client weights ``w``.
+
+    ``client_weights``: optional (N,) importances for the §III.B weighted-
+    barycenter extension (uniform = the paper's Algorithm 1).
+    """
+    k = state.center_idx.shape[0]
+    assignment = assign(w, state.center_idx, backend=backend)
+    prev_centers = w[state.center_idx].astype(jnp.float32)
+    b, counts = bary_mod.barycenters(w, assignment, k, fallback=prev_centers,
+                                     backend=backend,
+                                     client_weights=client_weights)
+    new_centers = bary_mod.medoids(w, b, assignment, backend=backend)
+    theta = bary_mod.global_aggregate(b)
+    return CoalitionRound(
+        assignment=assignment,
+        barycenters=b,
+        counts=counts,
+        new_center_idx=new_centers,
+        theta=theta,
+        state=CoalitionState(center_idx=new_centers, round=state.round + 1),
+    )

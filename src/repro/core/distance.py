@@ -1,0 +1,114 @@
+"""Euclidean distance between model weights (paper §III.A).
+
+``d(ω1, ω2) = sqrt(Σ_i (ω1_i − ω2_i)^2)``
+
+For framework-scale models D ranges from ~1.6e6 (the paper's CNN) to ~1e12
+(kimi-k2), so the (N, D) weight matrix never materialises distances naively:
+everything is computed as chunked partial sums over D.  ``backend='pallas'``
+routes the chunked accumulation through the Pallas kernel in
+``repro.kernels.pairwise_dist`` (TPU target, interpret-mode on CPU);
+``backend='xla'`` is the pure-jnp reference used by default on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _pairwise_sq_xla(w: jax.Array, chunk: int) -> jax.Array:
+    """Chunked Σ_d (w[i,d]-w[j,d])^2 -> (N, N)."""
+    n, d = w.shape
+    pad = (-d) % chunk
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+    nchunks = w.shape[1] // chunk
+    wc = w.reshape(n, nchunks, chunk).transpose(1, 0, 2)  # (nchunks, N, chunk)
+
+    def body(acc, wk):
+        diff = wk[:, None, :] - wk[None, :, :]
+        return acc + jnp.sum(diff * diff, axis=-1), None
+
+    acc0 = jnp.zeros((n, n), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, wc)
+    return acc
+
+
+def _pairwise_sq_dot(w: jax.Array) -> jax.Array:
+    """Gram-matrix form: ‖wi‖² + ‖wj‖² − 2⟨wi, wj⟩.
+
+    MXU-friendly and GSPMD-friendly: with w sharded (clients × D-shards) the
+    contraction over D becomes local partial Grams + an all-reduce of the tiny
+    (N, N) matrix instead of an all-gather of the full weight matrix (see
+    EXPERIMENTS.md §Perf, FL round)."""
+    wf = w.astype(jnp.float32)
+    gram = wf @ wf.T
+    sq = jnp.sum(wf * wf, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * gram
+    n = w.shape[0]
+    return jnp.maximum(d2, 0.0) * (1.0 - jnp.eye(n, dtype=jnp.float32))
+
+
+def pairwise_sq_dists(w: jax.Array, *, chunk: int = 65536, backend: str = "xla") -> jax.Array:
+    """Squared pairwise Euclidean distances of client weight vectors.
+
+    Args:
+      w: (N, D) client weight matrix (rows are flattened models).
+      chunk: D-chunk size for streaming accumulation.
+      backend: 'xla' (exact streaming diff-form, default), 'dot' (Gram form,
+        collective-efficient under sharding), or 'pallas' (TPU kernel).
+
+    Returns:
+      (N, N) float32 matrix of squared distances.
+    """
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.pairwise_sq_dists(w)
+    if backend == "dot":
+        return _pairwise_sq_dot(w)
+    return _pairwise_sq_xla(w.astype(jnp.float32), chunk)
+
+
+def pairwise_dists(w: jax.Array, **kw) -> jax.Array:
+    """The paper's d(ω_i, ω_j): element-wise sqrt of squared distances."""
+    return jnp.sqrt(jnp.maximum(pairwise_sq_dists(w, **kw), 0.0))
+
+
+def sq_dists_to_points(w: jax.Array, points: jax.Array, *, chunk: int = 65536,
+                       backend: str = "xla") -> jax.Array:
+    """(N, K) squared distances from each client row to each point row.
+
+    Used both for assignment (points = coalition-center weights) and for the
+    medoid step (points = barycenters).
+    """
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.sq_dists_to_points(w, points)
+    if backend == "dot":
+        wf, pf = w.astype(jnp.float32), points.astype(jnp.float32)
+        cross = wf @ pf.T
+        d2 = (jnp.sum(wf * wf, 1)[:, None] + jnp.sum(pf * pf, 1)[None, :]
+              - 2.0 * cross)
+        return jnp.maximum(d2, 0.0)
+    n, d = w.shape
+    k = points.shape[0]
+    pad = (-d) % chunk
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+        points = jnp.pad(points, ((0, 0), (0, pad)))
+    nchunks = w.shape[1] // chunk
+    wc = w.astype(jnp.float32).reshape(n, nchunks, chunk).transpose(1, 0, 2)
+    pc = points.astype(jnp.float32).reshape(k, nchunks, chunk).transpose(1, 0, 2)
+
+    def body(acc, args):
+        wk, pk = args
+        diff = wk[:, None, :] - pk[None, :, :]
+        return acc + jnp.sum(diff * diff, axis=-1), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((n, k), jnp.float32), (wc, pc))
+    return acc
+
+
+def dists_to_points(w: jax.Array, points: jax.Array, **kw) -> jax.Array:
+    return jnp.sqrt(jnp.maximum(sq_dists_to_points(w, points, **kw), 0.0))

@@ -1,0 +1,117 @@
+"""Pytree <-> flat-vector utilities.
+
+The paper's entire mechanism operates on *flattened model weights* viewed as
+vectors in R^D.  These helpers convert between model pytrees and the stacked
+``(n_clients, D)`` weight matrix the coalition engine consumes, without ever
+leaving jit.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    """Total bytes of a pytree (communication accounting)."""
+    return int(sum(np.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(tree)))
+
+
+def flatten(tree: PyTree, dtype=jnp.float32) -> jax.Array:
+    """Flatten a single model pytree into a 1-D weight vector ω ∈ R^D."""
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([l.astype(dtype).reshape(-1) for l in leaves])
+
+
+def unflatten(vec: jax.Array, like: PyTree) -> PyTree:
+    """Inverse of :func:`flatten` given a structural template."""
+    leaves, treedef = jax.tree.flatten(like)
+    out, off = [], 0
+    for l in leaves:
+        n = int(np.prod(l.shape))
+        out.append(vec[off : off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def stack_clients(trees: list[PyTree]) -> PyTree:
+    """Stack per-client pytrees into one pytree with a leading client axis."""
+    return jax.tree.map(lambda *ls: jnp.stack(ls, axis=0), *trees)
+
+
+def unstack_clients(stacked: PyTree, n: int) -> list[PyTree]:
+    return [jax.tree.map(lambda l: l[i], stacked) for i in range(n)]
+
+
+def client_matrix(stacked: PyTree, dtype=jnp.float32,
+                  select=None) -> jax.Array:
+    """``(n_clients, D)`` weight matrix from a stacked client pytree.
+
+    ``select``: optional predicate on the leaf path string (e.g.
+    ``lambda p: 'router' in p``) restricting which parameter groups enter the
+    distance geometry — DESIGN.md §5's router-only coalition option for MoE
+    clients, where expert blocks would otherwise dominate ‖ω‖.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(stacked)[0]
+    leaves = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if select is None or select(name):
+            leaves.append(leaf)
+    if not leaves:
+        raise ValueError("select matched no parameter leaves")
+    n = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.astype(dtype).reshape(n, -1) for l in leaves], axis=1
+    )
+
+
+def matrix_to_stacked(mat: jax.Array, like_single: PyTree) -> PyTree:
+    """Inverse of :func:`client_matrix`; ``like_single`` is one client's pytree."""
+    n = mat.shape[0]
+    leaves, treedef = jax.tree.flatten(like_single)
+    out, off = [], 0
+    for l in leaves:
+        sz = int(np.prod(l.shape))
+        out.append(mat[:, off : off + sz].reshape((n,) + l.shape).astype(l.dtype))
+        off += sz
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_map_vector(fn: Callable[[jax.Array], jax.Array], tree: PyTree) -> PyTree:
+    return jax.tree.map(fn, tree)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda l: l * s, a)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y, leafwise."""
+    return jax.tree.map(lambda xl, yl: alpha * xl + yl, x, y)
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda l: l.astype(dtype), tree)

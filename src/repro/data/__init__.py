@@ -1,0 +1,3 @@
+from repro.data import loader, partition, synthetic
+
+__all__ = ["loader", "partition", "synthetic"]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+  pairwise_dist  — streaming ‖ω_i − ω_j‖² over huge flattened-weight D
+  segment_mean   — coalition barycenter (K,N)@(N,D) streaming matmul
+  flash_attention— tiled online-softmax GQA attention (causal / windowed)
+
+``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles.
+EXAMPLE.md documents the kernel/ops/ref layout convention.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

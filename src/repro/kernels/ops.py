@@ -1,0 +1,63 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On a TPU backend the kernels compile natively (``interpret=False``); on CPU
+(this container) they execute via the Pallas interpreter, which runs the same
+kernel bodies in Python — bit-for-bit the logic that ships to the TPU.
+``custom_vjp`` gives the attention kernel a reference backward pass so models
+can call it under ``jax.grad``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import pairwise_dist as _pd
+from repro.kernels import ref as _ref
+from repro.kernels import segment_mean as _sm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pairwise_sq_dists(w: jax.Array, *, block_d: int = 16384) -> jax.Array:
+    return _pd.pairwise_sq_dists(w, block_d=block_d, interpret=_interpret())
+
+
+def sq_dists_to_points(w: jax.Array, p: jax.Array, *, block_d: int = 16384) -> jax.Array:
+    return _pd.sq_dists_to_points(w, p, block_d=block_d, interpret=_interpret())
+
+
+def segment_sum(onehot: jax.Array, w: jax.Array, *, block_d: int = 16384) -> jax.Array:
+    return _sm.segment_sum(onehot, w, block_d=block_d, interpret=_interpret())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal: bool = True, window: int | None = None,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128):
+    """Flash attention with kernel forward + reference backward."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, block_q=block_q, block_k=block_k,
+                               interpret=_interpret())
+
+
+def _fa_fwd(q, k, v, causal, window, scale, block_q, block_k):
+    out = flash_attention(q, k, v, causal, window, scale, block_q, block_k)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, scale, block_q, block_k, res, g):
+    q, k, v = res
+
+    def f(q_, k_, v_):
+        return _ref.attention(q_, k_, v_, causal=causal, window=window, scale=scale)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function here is the mathematical definition, written with no tiling or
+memory-hierarchy concerns; tests assert the kernels match these under shape /
+dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists(w: jax.Array) -> jax.Array:
+    """(N, D) -> (N, N) squared Euclidean distances."""
+    w = w.astype(jnp.float32)
+    diff = w[:, None, :] - w[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def sq_dists_to_points(w: jax.Array, p: jax.Array) -> jax.Array:
+    """(N, D), (K, D) -> (N, K) squared distances."""
+    w = w.astype(jnp.float32)
+    p = p.astype(jnp.float32)
+    diff = w[:, None, :] - p[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def segment_sum(onehot: jax.Array, w: jax.Array) -> jax.Array:
+    """(K, N) one-hot/weights x (N, D) -> (K, D) per-coalition sums."""
+    return onehot.astype(jnp.float32) @ w.astype(jnp.float32)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int | None = None,
+              scale: float | None = None) -> jax.Array:
+    """Reference multi-head attention with GQA broadcast.
+
+    q: (B, Hq, Sq, Dh); k, v: (B, Hkv, Skv, Dh) with Hq % Hkv == 0.
+    ``window``: optional sliding-window size (token attends to the previous
+    ``window`` positions inclusive of itself, in causal mode).
+    Returns (B, Hq, Sq, Dh) in q.dtype; softmax in float32.
+    """
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    if scale is None:
+        scale = dh ** -0.5
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    # positions: queries occupy the LAST sq slots of the skv timeline
+    qpos = jnp.arange(sq) + (skv - sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vq.astype(jnp.float32))
+    return out.astype(q.dtype)

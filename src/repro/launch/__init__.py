@@ -1,0 +1,7 @@
+"""Launch layer: production mesh, sharding rules, step builders, dry-run,
+training/serving drivers.  NOTE: ``dryrun`` sets
+xla_force_host_platform_device_count=512 at import — import it only as the
+dry-run entry point, never from tests/benchmarks."""
+from repro.launch import analysis, mesh, sharding, steps
+
+__all__ = ["analysis", "mesh", "sharding", "steps"]

@@ -1,0 +1,126 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+TPU v5e targets (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+  compute    = HLO_FLOPs_global / (chips * PEAK)
+  memory     = HLO_bytes_global / (chips * HBM_BW)
+  collective = collective_bytes_global / (chips * ICI_BW)
+
+``cost_analysis()`` reports the per-device (SPMD) program, so global = value
+x chips.  Collective bytes are not in cost_analysis: we parse the optimized
+HLO and sum the RESULT shapes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops (per-device, x chips for global) —
+documented as the data-moved proxy in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link per chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# result-type (possibly tuple) followed by the collective op name
+_COLL_LINE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+
+def shape_bytes(type_str: str) -> int:
+    """'bf16[256,4096]' (or a tuple of those) -> bytes."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device bytes by collective kind, from optimized HLO text."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _COLL_LINE_RE.finditer(hlo_text):
+        type_str, kind, _start = m.group(1), m.group(2), m.group(3)
+        out[kind] += shape_bytes(type_str)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def memory_stats(compiled) -> dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover - backend-dependent
+        return {"error": str(e)}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def roofline(compiled, *, chips: int, model_flops_global: float,
+             hlo_text: str | None = None) -> dict[str, Any]:
+    """All three roofline terms (seconds) + bottleneck + usefulness ratio."""
+    ca = compiled.cost_analysis() or {}
+    flops_dev = float(ca.get("flops", 0.0))
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    coll_dev = float(coll["total"])
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    hlo_flops_global = flops_dev * chips
+    return {
+        "chips": chips,
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "collective_breakdown": coll,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": bottleneck,
+        "model_flops_global": model_flops_global,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": (model_flops_global / hlo_flops_global
+                         if hlo_flops_global else 0.0),
+        "memory_analysis": memory_stats(compiled),
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: one token per seq

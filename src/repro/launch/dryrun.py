@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first backend initialisation.  Do not set this flag anywhere else
+# (smoke tests and benchmarks must see the single real CPU device).
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh)
+combination lowers AND compiles on the production mesh, and extract the
+roofline terms from the compiled artifact.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch chatglm3-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out dryrun.jsonl
+  PYTHONPATH=src python -m repro.launch.dryrun --fl          # the paper's FL round at scale
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, get, input_specs
+from repro.configs.shapes import SHAPES, applicable
+from repro.launch import analysis, sharding, steps
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tf
+
+
+def _mesh_chips(mesh) -> int:
+    return mesh.devices.size
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
+                optimizer: str = "sgd", remat: bool = True,
+                donate: bool = True, verbose: bool = True) -> dict:
+    """Lower + compile one (arch, shape, mesh) combo; return roofline record."""
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape_name)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = _mesh_chips(mesh)
+    specs = input_specs(cfg, shape_name)
+
+    params_shape = jax.eval_shape(lambda: tf.init(jax.random.key(0), cfg))
+    pspecs = sharding.param_specs(mesh, params_shape)
+    params_sds = sharding.attach(pspecs, params_shape, mesh)
+
+    with mesh:
+        if shape.kind == "train":
+            step, opt = steps.make_train_step(cfg, optimizer=optimizer,
+                                              remat=remat)
+            opt_shape = jax.eval_shape(opt.init, params_shape)
+            ospecs = sharding.opt_state_specs(mesh, opt_shape, pspecs,
+                                              params_shape)
+            opt_sds = sharding.attach(ospecs, opt_shape, mesh)
+            bspecs = sharding.batch_specs(mesh, specs["batch"])
+            batch_sds = sharding.attach(bspecs, specs["batch"], mesh)
+            fn = jax.jit(step, donate_argnums=(0, 1) if donate else ())
+            lowered = fn.lower(params_sds, opt_sds, batch_sds)
+        elif shape.kind == "prefill":
+            step = steps.make_prefill_step(cfg)
+            bspecs = sharding.batch_specs(mesh, specs["batch"])
+            batch_sds = sharding.attach(bspecs, specs["batch"], mesh)
+            cspecs = sharding.cache_specs(mesh, specs["cache"])
+            cache_sds = sharding.attach(cspecs, specs["cache"], mesh)
+            fn = jax.jit(step, donate_argnums=(2,) if donate else ())
+            lowered = fn.lower(params_sds, batch_sds, cache_sds)
+        else:  # decode
+            step = steps.make_decode_step(cfg)
+            tok_sds = sharding.attach(
+                sharding.batch_specs(mesh, specs["token"]), specs["token"], mesh)
+            cspecs = sharding.cache_specs(mesh, specs["cache"])
+            cache_sds = sharding.attach(cspecs, specs["cache"], mesh)
+            fn = jax.jit(step, donate_argnums=(2,) if donate else ())
+            lowered = fn.lower(params_sds, tok_sds, cache_sds)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    hlo = compiled.as_text()
+    roof = analysis.roofline(
+        compiled, chips=chips,
+        model_flops_global=analysis.model_flops(cfg, shape), hlo_text=hlo)
+    rec.update(status="ok", lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1), **roof)
+    del rec["collective_breakdown"]
+    rec["collectives"] = {k: int(v) for k, v in
+                          analysis.collective_bytes(hlo).items() if v}
+    if verbose:
+        print(f"[{rec['mesh']}] {arch} x {shape_name}: "
+              f"compute={roof['compute_s']:.3e}s memory={roof['memory_s']:.3e}s "
+              f"collective={roof['collective_s']:.3e}s "
+              f"bottleneck={roof['bottleneck']} useful={roof['useful_ratio']:.2f} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print("  memory_analysis:", rec["memory_analysis"])
+        ca = compiled.cost_analysis() or {}
+        print(f"  cost_analysis: flops/dev={ca.get('flops', 0):.3e} "
+              f"bytes/dev={ca.get('bytes accessed', 0):.3e}")
+    return rec
+
+
+def lower_fl_round(*, multi_pod: bool, n_clients: int = 256,
+                   n_coalitions: int = 8, verbose: bool = True,
+                   backend: str = "xla", wdtype_name: str = "float32",
+                   shard_w: bool = False, shardmap: bool = False,
+                   tag: str = "baseline") -> dict:
+    """Dry-run the PAPER'S federated coalition round at production scale:
+    N=256 clients sharded over the data axis, the paper's CNN per client.
+
+    Tuning knobs (EXPERIMENTS.md §Perf): ``backend='dot'`` (Gram-form
+    distance), ``wdtype_name='bfloat16'`` (half-width weight matrix),
+    ``shard_w=True`` (keep the (N, D) matrix D-sharded over the model axis).
+    """
+    from repro.core import coalitions
+    from repro.models import cnn
+
+    rec = {"arch": "paper-cnn-fl", "shape": f"fl_round_n{n_clients}",
+           "mesh": "2x16x16" if multi_pod else "16x16", "tag": tag,
+           "backend": backend, "wdtype": wdtype_name, "shard_w": shard_w}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = _mesh_chips(mesh)
+
+    ccfg = cnn.CNNConfig()
+    template = jax.eval_shape(lambda: cnn.init(jax.random.key(0), ccfg))
+    stacked = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((n_clients,) + l.shape, l.dtype), template)
+    ba = ("pod", "data") if multi_pod else "data"
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def shard0(l):
+        return jax.ShapeDtypeStruct(
+            l.shape, l.dtype,
+            sharding=NamedSharding(mesh, P(ba, *([None] * (l.ndim - 1)))))
+
+    stacked_sds = jax.tree.map(shard0, stacked)
+    batch_sds = {
+        "x": shard0(jax.ShapeDtypeStruct((n_clients, 32, 28, 28, 1), jnp.float32)),
+        "y": shard0(jax.ShapeDtypeStruct((n_clients, 32), jnp.int32)),
+    }
+    state_sds = coalitions.CoalitionState(
+        center_idx=jax.ShapeDtypeStruct((n_coalitions,), jnp.int32,
+                                        sharding=NamedSharding(mesh, P())),
+        round=jax.ShapeDtypeStruct((), jnp.int32,
+                                   sharding=NamedSharding(mesh, P())))
+
+    fl_round = steps.make_fl_round_step(
+        lambda p, b: cnn.loss_fn(p, b), template,
+        n_coalitions=n_coalitions, local_steps=5,
+        backend=backend, wdtype=jnp.dtype(wdtype_name),
+        wspec=(P(ba, "model") if shard_w else None),
+        shardmap_mesh=(mesh if shardmap else None), client_axis=ba)
+    rec["shardmap"] = shardmap
+
+    with mesh:
+        lowered = jax.jit(fl_round).lower(stacked_sds, batch_sds, state_sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    hlo = compiled.as_text()
+    d = sum(int(jnp.prod(jnp.array(l.shape))) for l in jax.tree.leaves(template))
+    roof = analysis.roofline(compiled, chips=chips,
+                             model_flops_global=6.0 * d * n_clients * 32 * 5,
+                             hlo_text=hlo)
+    rec.update(status="ok", lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1), **roof)
+    del rec["collective_breakdown"]
+    if verbose:
+        print(f"[{rec['mesh']}] FL coalition round (N={n_clients}, K={n_coalitions}): "
+              f"compute={roof['compute_s']:.3e}s memory={roof['memory_s']:.3e}s "
+              f"collective={roof['collective_s']:.3e}s bottleneck={roof['bottleneck']}")
+        print("  memory_analysis:", rec["memory_analysis"])
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="all assigned (arch x shape) combos")
+    ap.add_argument("--fl", action="store_true",
+                    help="dry-run the paper's coalition FL round at scale")
+    ap.add_argument("--fl-backend", default="xla", choices=["xla", "dot"])
+    ap.add_argument("--fl-wdtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--fl-shard-w", action="store_true",
+                    help="keep the (N, D) weight matrix D-sharded (model axis)")
+    ap.add_argument("--fl-shardmap", action="store_true",
+                    help="shard_map the per-client local-training phase")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adam"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    combos = []
+    if args.all:
+        combos = [(a, s) for a in ASSIGNED for s in SHAPES]
+    elif args.arch and args.shape:
+        combos = [(args.arch, args.shape)]
+    elif not args.fl:
+        ap.error("need --arch+--shape, --all, or --fl")
+
+    records = []
+    for multi in meshes:
+        if args.fl:
+            records.append(lower_fl_round(
+                multi_pod=multi, backend=args.fl_backend,
+                wdtype_name=args.fl_wdtype, shard_w=args.fl_shard_w,
+                shardmap=args.fl_shardmap, tag=args.tag))
+        for arch, shp in combos:
+            try:
+                records.append(lower_combo(arch, shp, multi_pod=multi,
+                                           optimizer=args.optimizer,
+                                           remat=not args.no_remat))
+            except Exception as e:
+                traceback.print_exc()
+                records.append({"arch": arch, "shape": shp,
+                                "mesh": "2x16x16" if multi else "16x16",
+                                "status": "error", "error": f"{type(e).__name__}: {e}"})
+    if args.out:
+        with open(args.out, "a") as f:
+            for r in records:
+                f.write(json.dumps(r, default=float) + "\n")
+    n_ok = sum(r.get("status") == "ok" for r in records)
+    n_skip = sum(r.get("status") == "skipped" for r in records)
+    n_err = len(records) - n_ok - n_skip
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Production mesh construction (TPU v5e pods; host-device placeholders in the
+dry-run).  A FUNCTION, not a module-level constant — importing this module
+never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) single-pod / (2, 16, 16) two-pod mesh.
+
+    Axes: ``data`` carries batch / FL clients (and FSDP-style expert
+    sharding), ``model`` carries tensor parallelism, ``pod`` carries the
+    cross-pod data-parallel replica.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "run under dryrun.py (it sets xla_force_host_platform_device_count)")
+    # more devices than needed (e.g. 512 placeholders, single-pod 256 mesh)
+    arr = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the real local devices (CPU smoke tests / examples)."""
+    n = len(jax.devices())
+    data = n // model
+    arr = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """The mesh axes that jointly shard the global batch."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

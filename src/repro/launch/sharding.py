@@ -1,0 +1,202 @@
+"""Sharding rules: param/input pytrees -> PartitionSpec trees.
+
+Megatron-style tensor parallelism on the ``model`` axis, batch (and MoE
+experts, FSDP-style) on ``data`` (+``pod``), with a single global rule:
+*shard a dimension only if it divides evenly, otherwise replicate* — this is
+what makes every assigned config lower on the same mesh (e.g. hymba's 25 query
+heads or seamless's 256206 vocab simply replicate where chatglm3's shard).
+
+Layer stacks carry a leading L (scan) dimension which is never sharded.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def _axis_size(mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([_axis_size(mesh, n) for n in name]))
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _fit(mesh, dim_size: int, axis):
+    """axis if it divides dim_size, else None (replicate)."""
+    if axis is None:
+        return None
+    return axis if dim_size % _axis_size(mesh, axis) == 0 else None
+
+
+def _leaf_spec(mesh, path: str, shape: tuple, batch_axes, *,
+               moe_expert_axis="data") -> P:
+    """PartitionSpec for one parameter leaf, by name pattern."""
+    nd = len(shape)
+    lead = path.startswith("layers/") or path.startswith("encoder/layers/")
+
+    def spec(*tail):
+        tail = list(tail) + [None] * (nd - len(tail) - (1 if lead else 0))
+        full = ([None] + tail) if lead else tail
+        full = [_fit(mesh, shape[i], a) for i, a in enumerate(full)]
+        return P(*full)
+
+    name = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    # --- embeddings / heads ---
+    if name == "embed":
+        return spec("model", None) if not lead else spec(None, "model")
+    if name == "lm_head":
+        return spec(None, "model")
+    if name == "proj":                       # modality projector stub
+        return spec(None, "model")
+
+    # --- attention ---
+    if parent in ("attn", "cross"):
+        if name in ("wq", "wk", "wv"):
+            return spec(None, "model")
+        if name == "wo":
+            return spec("model", None)
+        if name in ("bq", "bk", "bv"):
+            return spec("model")
+
+    # --- dense MLP ---
+    if parent == "mlp":
+        if name in ("wi", "wi_gate", "wi_up"):
+            return spec(None, "model")
+        if name == "wo":
+            return spec("model", None)
+
+    # --- MoE experts ---
+    # moe_expert_axis="data": FSDP-style (experts sharded over data, hidden
+    #   over model) — weights all-gather every step.
+    # moe_expert_axis="model": expert parallelism (each model-rank owns
+    #   E/model experts whole) — activations all-to-all instead.
+    if parent == "moe":
+        if name == "router":
+            return spec(None, None)
+        if moe_expert_axis == "model":
+            if name in ("wi_gate", "wi_up", "wo"):
+                return spec("model", None, None)
+        if name in ("wi_gate", "wi_up"):
+            return spec("data", None, "model")
+        if name == "wo":
+            return spec("data", "model", None)
+
+    # --- SSM ---
+    if parent == "ssm":
+        if name == "in_proj":
+            return spec(None, "model")
+        if name in ("conv_w",):
+            return spec(None, "model")
+        if name in ("conv_b", "dt_bias", "D"):
+            return spec("model")
+        if name == "x_proj":
+            return spec("model", None)
+        if name == "dt_proj":
+            return spec(None, "model")
+        if name == "A_log":
+            return spec("model", None)
+        if name == "out_proj":
+            return spec("model", None)
+
+    return spec()                             # replicate (norms, misc)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_specs(mesh, params_shape: PyTree, *,
+                moe_expert_axis: str = "data") -> PyTree:
+    """PartitionSpec tree for a param pytree of ShapeDtypeStructs/arrays."""
+    ba = ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+    def f(path, leaf):
+        return _leaf_spec(mesh, _path_str(path), leaf.shape, ba,
+                          moe_expert_axis=moe_expert_axis)
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def opt_state_specs(mesh, opt_state_shape: PyTree, pspecs_by_name: PyTree,
+                    params_shape: PyTree, *,
+                    moe_expert_axis: str = "data") -> PyTree:
+    """Optimizer states (momentum/Adam moments) shard like their params."""
+    def f(path, leaf):
+        p = _path_str(path)
+        # strip the leading state-name component ('mu/...', 'm/...', 'v/...')
+        parts = p.split("/")
+        if parts and parts[0] in ("mu", "m", "v"):
+            p = "/".join(parts[1:])
+        if not p or parts[0] == "step" or leaf.ndim == 0:
+            return jax.sharding.PartitionSpec()
+        ba = ("pod", "data") if "pod" in mesh.axis_names else "data"
+        return _leaf_spec(mesh, p, leaf.shape, ba,
+                          moe_expert_axis=moe_expert_axis)
+
+    return jax.tree_util.tree_map_with_path(f, opt_state_shape)
+
+
+def batch_specs(mesh, batch_shape: PyTree) -> PyTree:
+    """Input batches: leading (global batch) dim over pod+data."""
+    ba = ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+    def f(leaf):
+        if leaf.ndim == 0:
+            return P()
+        b = leaf.shape[0]
+        return P(_fit(mesh, b, ba), *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(f, batch_shape)
+
+
+def cache_specs(mesh, cache_shape: PyTree) -> PyTree:
+    """Decode caches.
+
+    KV (L, B, Hkv, S, Dh): batch over pod+data when divisible; otherwise
+    (long_500k, B=1) the cache SEQUENCE dim shards over data (sequence-
+    parallel decode) and heads over model when divisible.
+    SSM state (L, B, di, N): d_inner over model; batch over data if divisible.
+    """
+    ba = ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+    def f(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        if leaf.ndim == 0:
+            return P()
+        if name in ("k", "v"):
+            L, b, h, s, dh = leaf.shape
+            bax = _fit(mesh, b, ba)
+            if bax is not None:
+                return P(None, bax, _fit(mesh, h, "model"), None, None)
+            return P(None, None, _fit(mesh, h, "model"), _fit(mesh, s, "data"), None)
+        if name == "h":
+            L, b, di, n = leaf.shape
+            return P(None, _fit(mesh, b, ba), _fit(mesh, di, "model"), None)
+        if name == "conv":
+            L, b, ck, di = leaf.shape
+            return P(None, _fit(mesh, b, ba), None, _fit(mesh, di, "model"))
+        if name == "memory":
+            b, s, d = leaf.shape
+            return P(_fit(mesh, b, ba), None, _fit(mesh, d, "model"))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(f, cache_shape)
+
+
+def with_named(mesh, specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def attach(specs_tree: PyTree, shape_tree: PyTree, mesh) -> PyTree:
+    """ShapeDtypeStructs with shardings attached (for .lower())."""
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)),
+        shape_tree, specs_tree)

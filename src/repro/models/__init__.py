@@ -1,0 +1,5 @@
+from repro.models import cnn, config, encdec, layers, moe, ssm, transformer
+from repro.models.config import ModelConfig
+
+__all__ = ["cnn", "config", "encdec", "layers", "moe", "ssm", "transformer",
+           "ModelConfig"]

@@ -1,0 +1,237 @@
+"""Functional NN layers: norms, RoPE, GQA attention (full / windowed / cross /
+cached-decode), MLPs.  Every layer is an ``init(key, ...) -> params`` /
+``apply(params, x, ...)`` pair over plain dict pytrees, so layer stacks can be
+vmap-initialised and lax.scan-applied with a leading layer axis.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# Route full-sequence attention through the Pallas flash kernel
+# (repro.kernels.flash_attention).  Default off: on CPU the interpreter is
+# slow and the dry-run cost model should see the XLA path; on a TPU backend
+# flip this on (launch drivers expose --flash).
+USE_FLASH_KERNEL: bool = False
+
+
+def set_flash_kernel(on: bool) -> None:
+    global USE_FLASH_KERNEL
+    USE_FLASH_KERNEL = on
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    if scale is None:
+        scale = d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# --- norms -------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# --- rotary embeddings ---------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+         fraction: float = 1.0) -> jax.Array:
+    """Apply rotary embeddings to the leading ``fraction`` of the head dim.
+
+    x: (..., S, Dh); positions: broadcastable to (..., S).
+    ``fraction=0.5`` reproduces chatglm3's partial ("2d") rotary.
+    """
+    dh = x.shape[-1]
+    rot = int(dh * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    xr = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([xr.astype(x.dtype), x_pass], axis=-1)
+
+
+# --- attention -----------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig, d_kv_in: int | None = None) -> dict:
+    """QKVO projections.  ``d_kv_in`` overrides the K/V input width (cross-attn
+    over an encoder memory of different width — not used by the assigned
+    configs but kept general)."""
+    dt = _dtype(cfg)
+    d, dh, hq, hkv = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    dkv = d_kv_in or d
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d, hq * dh, dt),
+        "wk": dense_init(kk, dkv, hkv * dh, dt),
+        "wv": dense_init(kv, dkv, hkv * dh, dt),
+        "wo": dense_init(ko, hq * dh, d, dt, scale=(hq * dh) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dt)
+        p["bk"] = jnp.zeros((hkv * dh,), dt)
+        p["bv"] = jnp.zeros((hkv * dh,), dt)
+    return p
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1).transpose(0, 2, 1, 3)     # (B, H, S, Dh)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def _sdpa(q, k, v, *, causal: bool, window: Optional[int],
+          scale: float, kv_len: Optional[jax.Array] = None,
+          valid_mask: Optional[jax.Array] = None) -> jax.Array:
+    """XLA-path scaled-dot-product attention with GQA broadcast.
+
+    q: (B, Hq, Sq, Dh); k, v: (B, Hkv, Skv, Dh).  Queries sit at the END of
+    the K/V timeline.  ``kv_len``: optional dynamic number of valid cache
+    entries (decode with a partially-filled cache).  ``valid_mask``: explicit
+    (Skv,) slot-validity mask (ring-buffer caches, where slot order is not
+    position order — attention is permutation-invariant given the mask).
+    """
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, group, sq, dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    if valid_mask is not None:
+        mask = jnp.broadcast_to(valid_mask[None, :], (sq, skv))
+    else:
+        kpos = jnp.arange(skv)
+        if kv_len is not None:
+            qpos = kv_len - sq + jnp.arange(sq)
+        else:
+            qpos = (skv - sq) + jnp.arange(sq)
+        mask = jnp.ones((sq, skv), bool)
+        if causal:
+            mask = kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(b, hq, sq, dh).astype(q.dtype)
+
+
+def attention_apply(params: dict, cfg: ModelConfig, x: jax.Array, *,
+                    positions: jax.Array,
+                    cache: Optional[dict] = None,
+                    cache_index: Optional[jax.Array] = None,
+                    memory: Optional[jax.Array] = None,
+                    causal: bool = True,
+                    use_rope: bool = True) -> tuple[jax.Array, Optional[dict]]:
+    """GQA attention over x: (B, S, d).
+
+    Modes:
+      * training / prefill: ``cache=None`` — full self-attention.
+      * decode: ``cache={'k','v'}`` (B, Hkv, S_max, Dh) and ``cache_index`` =
+        number of tokens already cached; x is the new token(s).
+      * cross-attention: ``memory`` (B, S_enc, d) supplies K/V (no cache,
+        no rope, no causal mask).
+    """
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    scale = dh ** -0.5
+    q = x @ params["wq"]
+    kv_in = memory if memory is not None else x
+    k = kv_in @ params["wk"]
+    v = kv_in @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = _split_heads(q, hq)
+    k = _split_heads(k, hkv)
+    v = _split_heads(v, hkv)
+    if memory is not None:
+        out = _sdpa(q, k, v, causal=False, window=None, scale=scale)
+        return _merge_heads(out) @ params["wo"], None
+    if use_rope:
+        q = rope(q, positions[:, None, :], cfg.rope_theta, cfg.rope_fraction)
+        k = rope(k, positions[:, None, :], cfg.rope_theta, cfg.rope_fraction)
+    if cache is not None:
+        idx = cache_index
+        size = cache["k"].shape[2]
+        ring = cfg.window is not None and size == cfg.window
+        if ring:
+            # Sliding-window ring buffer: the cache holds only the last
+            # `window` KVs.  Keys carry RoPE at their absolute positions, so
+            # slot order is irrelevant — attention is permutation-invariant
+            # under an explicit validity mask.  (Writes must not wrap:
+            # decode writes 1 token; prefill prompts must fit the window.)
+            slot = jnp.remainder(idx, size)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
+            valid = jnp.arange(size) < jnp.minimum(idx + x.shape[1], size)
+            out = _sdpa(q, ck, cv, causal=False, window=None, scale=scale,
+                        valid_mask=valid)
+            return _merge_heads(out) @ params["wo"], {"k": ck, "v": cv}
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=2)
+        new_cache = {"k": ck, "v": cv}
+        kv_len = idx + x.shape[1]
+        out = _sdpa(q, ck, cv, causal=True, window=cfg.window, scale=scale,
+                    kv_len=kv_len)
+        return _merge_heads(out) @ params["wo"], new_cache
+    if USE_FLASH_KERNEL:
+        from repro.kernels import ops as kops
+
+        bq = min(128, max(8, q.shape[2]))
+        out = kops.flash_attention(q, k, v, causal, cfg.window, scale,
+                                   bq, min(128, max(8, k.shape[2])))
+    else:
+        out = _sdpa(q, k, v, causal=causal, window=cfg.window, scale=scale)
+    return _merge_heads(out) @ params["wo"], None
+
+
+# --- MLPs ----------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    if cfg.mlp == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"wi_gate": dense_init(k1, d, ff, dt),
+                "wi_up": dense_init(k2, d, ff, dt),
+                "wo": dense_init(k3, ff, d, dt, scale=ff ** -0.5)}
+    k1, k2 = jax.random.split(key, 2)
+    return {"wi": dense_init(k1, d, ff, dt),
+            "wo": dense_init(k2, ff, d, dt, scale=ff ** -0.5)}
+
+
+def mlp_apply(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if "wi_gate" in params:
+        h = jax.nn.silu((x @ params["wi_gate"]).astype(jnp.float32)).astype(x.dtype)
+        h = h * (x @ params["wi_up"])
+        return h @ params["wo"]
+    h = jax.nn.gelu((x @ params["wi"]).astype(jnp.float32)).astype(x.dtype)
+    return h @ params["wo"]

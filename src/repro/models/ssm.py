@@ -1,0 +1,164 @@
+"""Mamba-1 selective SSM block (falcon-mamba / hymba SSM heads).
+
+TPU adaptation of the CUDA selective-scan: the fused GPU kernel's key property
+is that the (B, S, d_inner, N) discretised tensors are NEVER materialised —
+they are recomputed tile-by-tile in shared memory.  We reproduce that on TPU
+at the XLA level: an outer ``lax.scan`` over sequence chunks (rematerialised
+with ``jax.checkpoint``) computes the per-chunk (B, L, d_inner, N)
+coefficients on the fly from the compact projections delta (B,S,di) and
+B/C (B,S,N), and an inner exact scan advances the recurrence
+
+    h_t = exp(Δ_t·A)·h_{t-1} + Δ_t·B_t·x_t,   y_t = <C_t, h_t> + D·x_t.
+
+Decode is the single-step recurrence with a (B, di, N) state and a causal-conv
+ring buffer.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+
+def ssm_init(key, cfg: ModelConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, di, n, dr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32)
+                   * (cfg.ssm_conv ** -0.5)).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], di, dr + 2 * n, dt),
+        "dt_proj": dense_init(ks[3], dr, di, dt),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(a),                                   # (di, N) f32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dt, scale=di ** -0.5),
+    }
+
+
+def _projections(params, cfg: ModelConfig, u: jax.Array):
+    """u: (B, S, di) post-conv -> delta (B,S,di) f32, B (B,S,N), C (B,S,N)."""
+    n, dr = cfg.ssm_state, cfg.dt_rank_
+    xdbc = u @ params["x_proj"]                                # (B, S, dr+2N)
+    dt_in, bmat, cmat = jnp.split(xdbc.astype(jnp.float32), [dr, dr + n], axis=-1)
+    delta = jax.nn.softplus(dt_in @ params["dt_proj"].astype(jnp.float32)
+                            + params["dt_bias"])               # (B, S, di)
+    return delta, bmat, cmat
+
+
+def _causal_conv(params, cfg: ModelConfig, x: jax.Array,
+                 conv_cache: Optional[jax.Array] = None):
+    """Depthwise causal conv1d.  x: (B, S, di)."""
+    kk = cfg.ssm_conv
+    if conv_cache is None:
+        pad = jnp.zeros((x.shape[0], kk - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                     # (B, S+k-1, di)
+    w = params["conv_w"].astype(jnp.float32)                   # (k, di)
+    out = sum(xp[:, i:i + x.shape[1]].astype(jnp.float32) * w[i]
+              for i in range(kk))
+    out = out + params["conv_b"].astype(jnp.float32)
+    new_cache = xp[:, -(kk - 1):] if kk > 1 else pad
+    return out.astype(x.dtype), new_cache
+
+
+def ssm_apply(params: dict, cfg: ModelConfig, x: jax.Array, *,
+              chunk: int = 64, state: Optional[dict] = None,
+              return_state: bool = False):
+    """Training/prefill forward.  x: (B, S, d) -> (B, S, d).
+
+    ``state``: optional carried decode state {'conv', 'h'} — a PREFILL
+    continues the recurrence from it; ``return_state=True`` additionally
+    returns the final {'conv', 'h'} so decoding can continue.
+    """
+    b, s, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = x @ params["in_proj"]                                 # (B, S, 2di)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, new_conv = _causal_conv(params, cfg, u,
+                               conv_cache=None if state is None
+                               else state["conv"])
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    delta, bmat, cmat = _projections(params, cfg, u)
+    a = -jnp.exp(params["A_log"])                              # (di, N)
+
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        uf = jnp.pad(u.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    else:
+        uf = u.astype(jnp.float32)
+    sp = s + pad
+    nchunk = sp // chunk
+
+    def to_chunks(t):  # (B, S, F) -> (nchunk, B, L, F)
+        return t.reshape(b, nchunk, chunk, -1).transpose(1, 0, 2, 3)
+
+    dc, bc, cc, uc = map(to_chunks, (delta, bmat, cmat, uf))
+
+    @jax.checkpoint
+    def chunk_body(h, args):
+        dl, bm, cm, uu = args                                  # (B, L, ...)
+        dA = jnp.exp(dl[..., None] * a[None, None])            # (B, L, di, N)
+        dBu = (dl * uu)[..., None] * bm[..., None, :]          # (B, L, di, N)
+
+        def step(hh, t):
+            hh = hh * dA[:, t] + dBu[:, t]                     # (B, di, N)
+            y = jnp.einsum("bdn,bn->bd", hh, cm[:, t])
+            return hh, y
+
+        h, ys = jax.lax.scan(step, h, jnp.arange(chunk))
+        return h, ys                                           # ys: (L, B, di)
+
+    h0 = (jnp.zeros((b, di, n), jnp.float32) if state is None
+          else state["h"])
+    hT, ys = jax.lax.scan(chunk_body, h0, (dc, bc, cc, uc))    # (nchunk, L, B, di)
+    y = ys.transpose(2, 0, 1, 3).reshape(b, sp, di)[:, :s]
+    y = y + params["D"] * u.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = (y.astype(x.dtype)) @ params["out_proj"]
+    if not return_state:
+        return out
+    # exact final state: padding chunks advance h with dA=exp(0 * a)=... pad
+    # deltas are 0 => dA=exp(0)=1? No: padded delta=0 -> dA=exp(0*a)=1, dBu=0,
+    # so h is UNCHANGED by padding steps — hT is exact.
+    conv_dt = params["conv_w"].dtype
+    return out, {"conv": new_conv.astype(conv_dt), "h": hT}
+
+
+def ssm_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def ssm_step(params: dict, cfg: ModelConfig, x: jax.Array,
+             state: dict) -> tuple[jax.Array, dict]:
+    """Single decode step.  x: (B, 1, d)."""
+    xz = x @ params["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)                           # (B, 1, di)
+    u, new_conv = _causal_conv(params, cfg, u, conv_cache=state["conv"])
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    delta, bmat, cmat = _projections(params, cfg, u)           # (B, 1, ...)
+    a = -jnp.exp(params["A_log"])
+    dA = jnp.exp(delta[:, 0, :, None] * a[None])               # (B, di, N)
+    dBu = (delta[:, 0] * u[:, 0].astype(jnp.float32))[..., None] \
+        * bmat[:, 0, None, :]
+    h = state["h"] * dA + dBu                                  # (B, di, N)
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])[:, None]       # (B, 1, di)
+    y = y + params["D"] * u.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(x.dtype) @ params["out_proj"]
+    return out, {"conv": new_conv.astype(state["conv"].dtype), "h": h}

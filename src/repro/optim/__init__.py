@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (Optimizer, adam, adamw, sgd,
+                                    clip_by_global_norm, chain)
+from repro.optim.schedules import (constant, cosine_decay, linear_warmup,
+                                   warmup_cosine)
+
+__all__ = ["Optimizer", "adam", "adamw", "sgd", "clip_by_global_norm",
+           "chain", "constant", "cosine_decay", "linear_warmup",
+           "warmup_cosine"]

@@ -1,0 +1,110 @@
+"""Minimal functional optimizers (no optax in this container).
+
+API mirrors optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (updates, new_state)``; apply with
+``apply_updates``.  All states are pytrees, safe under jit/scan/vmap.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    """SGD with optional (Nesterov) momentum.  ``lr`` may be a float or a
+    ``step -> lr`` schedule; schedules require passing ``step=`` to update."""
+
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {"mu": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        rate = lr(step) if callable(lr) else lr
+        if momentum == 0.0:
+            upd = jax.tree.map(lambda g: -rate * g, grads)
+            return upd, {"step": step + 1}
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -rate * (momentum * m + g), mu, grads)
+        else:
+            upd = jax.tree.map(lambda m: -rate * m, mu)
+        return upd, {"mu": mu, "step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    """Adam / AdamW (decoupled weight decay when weight_decay > 0)."""
+
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        rate = lr(step) if callable(lr) else lr
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def u(m_, v_, p):
+            upd = -rate * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                upd = upd - rate * weight_decay * p.astype(jnp.float32)
+            return upd
+
+        if params is None:
+            upd = jax.tree.map(lambda m_, v_: u(m_, v_, jnp.zeros(())), m, v)
+        else:
+            upd = jax.tree.map(u, m, v, params)
+        return upd, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def clip_by_global_norm(max_norm: float) -> Callable[[PyTree], PyTree]:
+    """Gradient transformation: clip a grad pytree to a global L2 norm."""
+
+    def clip(grads):
+        norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+        return jax.tree.map(lambda g: g * scale, grads)
+
+    return clip
+
+
+def chain(transform: Callable[[PyTree], PyTree], opt: Optimizer) -> Optimizer:
+    """Apply a grad transformation (e.g. clipping) before an optimizer."""
+
+    def update(grads, state, params=None):
+        return opt.update(transform(grads), state, params)
+
+    return Optimizer(opt.init, update)

@@ -1,0 +1,34 @@
+"""Learning-rate schedules (``step -> lr`` callables)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def f(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+        return lr * frac
+    return f
+
+
+def cosine_decay(lr: float, decay_steps: int, alpha: float = 0.0):
+    def f(step):
+        t = jnp.minimum(step.astype(jnp.float32) / decay_steps, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * ((1 - alpha) * cos + alpha)
+    return f
+
+
+def warmup_cosine(lr: float, warmup_steps: int, decay_steps: int,
+                  alpha: float = 0.0):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / max(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / max(decay_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = lr * ((1 - alpha) * 0.5 * (1 + jnp.cos(jnp.pi * t)) + alpha)
+        return jnp.where(s < warmup_steps, warm, cos)
+    return f

@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests (REDUCED variants of the same family):
+one forward + train step + decode on CPU, asserting shapes and no NaNs,
+plus a decode-vs-forward logits consistency check (validates KV-cache,
+SSM-state and cross-attention serving paths against the training path)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, get, reduced
+from repro.launch import steps as steps_mod
+from repro.models import transformer as tf
+
+B, S = 2, 16
+
+
+def _batch(cfg, seed=0):
+    batch = {"tokens": jax.random.randint(jax.random.key(seed), (B, S), 0,
+                                          cfg.vocab)}
+    if cfg.modality:
+        batch["modal"] = jax.random.normal(
+            jax.random.key(seed + 1), (B, cfg.n_modal_tokens, cfg.d_modal),
+            jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def models():
+    cache = {}
+
+    def build(name):
+        if name not in cache:
+            cfg = reduced(get(name))
+            # high capacity so MoE routing drops cannot perturb the
+            # decode-vs-forward consistency check
+            if cfg.moe:
+                cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+            cache[name] = (cfg, tf.init(jax.random.key(0), cfg))
+        return cache[name]
+
+    return build
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_forward_shapes_no_nan(models, name):
+    cfg, params = models(name)
+    batch = _batch(cfg)
+    logits, aux = jax.jit(lambda p, b: tf.forward(p, cfg, b))(params, batch)
+    prefix = cfg.n_modal_tokens if (cfg.modality and not cfg.enc_dec) else 0
+    assert logits.shape == (B, S + prefix, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert jnp.isfinite(aux)
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_train_step_reduces_loss(models, name):
+    cfg, params = models(name)
+    step, opt = steps_mod.make_train_step(cfg, optimizer="sgd", lr=0.05,
+                                          remat=True)
+    ost = opt.init(params)
+    batch = _batch(cfg)
+    sj = jax.jit(step)
+    p, ost, l0 = sj(params, ost, batch)
+    for _ in range(3):
+        p, ost, l = sj(p, ost, batch)
+    assert jnp.isfinite(l0) and jnp.isfinite(l)
+    assert float(l) < float(l0)
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_decode_matches_forward(models, name):
+    """prefill(S-1) + decode(1 token) logits == full-forward last logits."""
+    cfg, params = models(name)
+    batch = _batch(cfg, seed=7)
+    logits_full, _ = tf.forward(params, cfg, batch)
+
+    prefix = cfg.n_modal_tokens if (cfg.modality and not cfg.enc_dec) else 0
+    cache = tf.init_cache(cfg, B, prefix + S + 2)
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, :-1]
+    _, cache = tf.prefill(params, cfg, pre_batch, cache)
+    logits_step, cache = tf.decode_step(params, cfg, batch["tokens"][:, -1],
+                                        cache)
+    np.testing.assert_allclose(
+        np.asarray(logits_step), np.asarray(logits_full[:, -1]),
+        rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_multi_step_decode_finite(models, name):
+    cfg, params = models(name)
+    batch = _batch(cfg, seed=3)
+    prefix = cfg.n_modal_tokens if (cfg.modality and not cfg.enc_dec) else 0
+    cache = tf.init_cache(cfg, B, prefix + S + 8)
+    logits, cache = tf.prefill(params, cfg, batch, cache)
+    dj = jax.jit(lambda p, t, c: tf.decode_step(p, cfg, t, c))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(4):
+        logits, cache = dj(params, tok, cache)
+        assert not bool(jnp.any(jnp.isnan(logits)))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+def test_full_configs_match_assignment():
+    """The full (non-reduced) configs carry the exact assigned dimensions."""
+    expect = {
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "falcon-mamba-7b": (64, 4096, 0, 0, 0, 65024),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    }
+    for name, (L, d, h, kv, ff, v) in expect.items():
+        c = ARCHS[name]
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+                c.vocab) == (L, d, h, kv, ff, v), name
+    assert ARCHS["moonshot-v1-16b-a3b"].n_experts == 64
+    assert ARCHS["moonshot-v1-16b-a3b"].top_k == 6
+    assert ARCHS["phi3.5-moe-42b-a6.6b"].n_experts == 16
+    assert ARCHS["kimi-k2-1t-a32b"].n_experts == 384
+    assert ARCHS["kimi-k2-1t-a32b"].top_k == 8
+    assert ARCHS["falcon-mamba-7b"].ssm and ARCHS["falcon-mamba-7b"].ssm_state == 16
+    assert ARCHS["hymba-1.5b"].hybrid and ARCHS["hymba-1.5b"].ssm_state == 16
+    assert ARCHS["seamless-m4t-large-v2"].enc_dec
+
+
+def test_param_counts_sane():
+    """Analytic parameter counts land near the advertised sizes."""
+    assert 5e9 < ARCHS["chatglm3-6b"].n_params() < 8e9
+    assert 12e9 < ARCHS["phi3-medium-14b"].n_params() < 16e9
+    assert 6e9 < ARCHS["falcon-mamba-7b"].n_params() < 8.5e9
+    assert 1e9 < ARCHS["hymba-1.5b"].n_params() < 2.2e9
+    assert 38e9 < ARCHS["phi3.5-moe-42b-a6.6b"].n_params() < 46e9
+    assert 0.8e12 < ARCHS["kimi-k2-1t-a32b"].n_params() < 1.2e12
+    assert 25e9 < ARCHS["kimi-k2-1t-a32b"].n_active_params() < 40e9
+    assert 6e9 < ARCHS["starcoder2-7b"].n_params() < 8.5e9
+    # NOTE: the ASSIGNED moonshot spec (48L x 64e x d_ff=1408) totals ~28B —
+    # the hf 16B card has 27 layers; we honor the assignment's 48 (DESIGN.md).
+    assert 20e9 < ARCHS["moonshot-v1-16b-a3b"].n_params() < 32e9
+    assert 2.0e9 < ARCHS["moonshot-v1-16b-a3b"].n_active_params() < 5.0e9

@@ -1,0 +1,260 @@
+"""Unit + property tests for the paper's core: distance, barycenter,
+coalition formation (Algorithm 1), aggregation rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation, barycenter, coalitions, distance, pytree
+
+
+def _rand_w(n, d, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, d)).astype(np.float32) * scale)
+
+
+# --- distance (§III.A) ---------------------------------------------------------
+
+class TestDistance:
+    def test_matches_numpy(self):
+        w = _rand_w(10, 1000)
+        got = distance.pairwise_sq_dists(w)
+        wn = np.asarray(w)
+        want = ((wn[:, None] - wn[None, :]) ** 2).sum(-1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+    def test_symmetry_and_zero_diag(self):
+        w = _rand_w(7, 333, seed=1)
+        d2 = distance.pairwise_sq_dists(w)
+        np.testing.assert_allclose(d2, d2.T, rtol=1e-5)
+        np.testing.assert_allclose(np.diag(d2), 0.0, atol=1e-3)
+
+    def test_chunking_invariance(self):
+        w = _rand_w(5, 10001, seed=2)
+        a = distance.pairwise_sq_dists(w, chunk=64)
+        b = distance.pairwise_sq_dists(w, chunk=100000)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-3)
+
+    def test_to_points(self):
+        w = _rand_w(8, 500, seed=3)
+        p = _rand_w(3, 500, seed=4)
+        got = distance.sq_dists_to_points(w, p)
+        wn, pn = np.asarray(w), np.asarray(p)
+        want = ((wn[:, None] - pn[None, :]) ** 2).sum(-1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+    @given(st.integers(2, 12), st.integers(1, 64), st.integers(0, 100))
+    @settings(max_examples=25, deadline=None)
+    def test_property_nonneg_triangle(self, n, d, seed):
+        w = _rand_w(n, d, seed=seed)
+        dm = np.asarray(distance.pairwise_dists(w))
+        assert (dm >= 0).all()
+        # triangle inequality on a random triple
+        i, j, k = np.random.default_rng(seed).integers(0, n, 3)
+        assert dm[i, j] <= dm[i, k] + dm[k, j] + 1e-3
+
+
+# --- barycenter (§III.B) --------------------------------------------------------
+
+class TestBarycenter:
+    def test_segment_means(self):
+        w = _rand_w(6, 40)
+        a = jnp.array([0, 0, 1, 1, 2, 2])
+        b, counts = barycenter.barycenters(w, a, 3)
+        np.testing.assert_allclose(counts, [2, 2, 2])
+        for j in range(3):
+            np.testing.assert_allclose(
+                b[j], np.asarray(w)[2 * j:2 * j + 2].mean(0), rtol=1e-5)
+
+    def test_empty_coalition_fallback(self):
+        w = _rand_w(4, 10)
+        a = jnp.array([0, 0, 0, 0])
+        fb = _rand_w(2, 10, seed=9)
+        b, counts = barycenter.barycenters(w, a, 2, fallback=fb)
+        np.testing.assert_allclose(counts, [4, 0])
+        np.testing.assert_allclose(b[1], fb[1], rtol=1e-6)
+
+    def test_medoid_is_member_and_argmin(self):
+        w = _rand_w(9, 30, seed=5)
+        a = jnp.array([0, 0, 0, 1, 1, 1, 2, 2, 2])
+        b, _ = barycenter.barycenters(w, a, 3)
+        med = barycenter.medoids(w, b, a)
+        for j in range(3):
+            assert int(a[med[j]]) == j          # medoid belongs to coalition j
+            members = np.flatnonzero(np.asarray(a) == j)
+            dists = ((np.asarray(w)[members] - np.asarray(b)[j]) ** 2).sum(-1)
+            assert int(med[j]) == members[np.argmin(dists)]
+
+    def test_global_aggregate_is_mean_of_barycenters(self):
+        b = _rand_w(3, 17, seed=6)
+        np.testing.assert_allclose(barycenter.global_aggregate(b),
+                                   np.asarray(b).mean(0), rtol=1e-6)
+
+
+# --- Algorithm 1 ----------------------------------------------------------------
+
+class TestCoalitions:
+    def test_init_centers_distinct(self):
+        w = _rand_w(10, 64, seed=7)
+        st_ = coalitions.init_centers(jax.random.key(0), w, 3)
+        idx = np.asarray(st_.center_idx)
+        assert len(set(idx.tolist())) == 3
+        d2 = np.asarray(distance.pairwise_sq_dists(w))
+        for a in range(3):
+            for b in range(a + 1, 3):
+                assert d2[idx[a], idx[b]] > 0
+
+    def test_init_centers_with_duplicates(self):
+        # only 3 distinct weight vectors among 10 clients
+        base = _rand_w(3, 16, seed=8)
+        w = jnp.concatenate([base, jnp.tile(base[0], (7, 1))])
+        st_ = coalitions.init_centers(jax.random.key(1), w, 3)
+        d2 = np.asarray(distance.pairwise_sq_dists(w))
+        idx = np.asarray(st_.center_idx)
+        for a in range(3):
+            for b in range(a + 1, 3):
+                assert d2[idx[a], idx[b]] > 0
+
+    def test_assign_nearest_and_pin(self):
+        w = _rand_w(10, 32, seed=9)
+        centers = jnp.array([0, 4, 7], jnp.int32)
+        a = coalitions.assign(w, centers)
+        assert int(a[0]) == 0 and int(a[4]) == 1 and int(a[7]) == 2
+        d2 = np.asarray(distance.sq_dists_to_points(w, w[centers]))
+        for i in range(10):
+            if i not in (0, 4, 7):
+                assert int(a[i]) == int(np.argmin(d2[i]))
+
+    def test_round_recovers_separated_clusters(self):
+        rng = np.random.default_rng(0)
+        centers = rng.standard_normal((3, 50)).astype(np.float32) * 20
+        w = jnp.asarray(np.concatenate(
+            [centers[j] + 0.1 * rng.standard_normal((4, 50)).astype(np.float32)
+             for j in range(3)]))
+        state = coalitions.init_centers(jax.random.key(3), w, 3)
+        # a couple of rounds of the (kmeans-like) update converge
+        for _ in range(3):
+            r = coalitions.run_round(w, state)
+            state = r.state
+        a = np.asarray(r.assignment).reshape(3, 4)
+        assert all(len(set(row.tolist())) == 1 for row in a)       # pure blocks
+        assert len({row[0] for row in a.tolist()}) == 3            # distinct
+
+    @given(st.integers(4, 16), st.integers(2, 4), st.integers(0, 50))
+    @settings(max_examples=20, deadline=None)
+    def test_round_invariants(self, n, k, seed):
+        w = _rand_w(n, 24, seed=seed)
+        state = coalitions.init_centers(jax.random.key(seed), w, k)
+        r = coalitions.run_round(w, state)
+        a = np.asarray(r.assignment)
+        assert ((a >= 0) & (a < k)).all()
+        assert int(np.asarray(r.counts).sum()) == n
+        # theta is the mean of coalition barycenters (Step IV)
+        np.testing.assert_allclose(r.theta, np.asarray(r.barycenters).mean(0),
+                                   rtol=1e-5, atol=1e-5)
+        # new centers are members of their coalitions
+        for j in range(k):
+            if np.asarray(r.counts)[j] > 0:
+                assert a[int(r.new_center_idx[j])] == j
+
+    def test_k1_equals_fedavg(self):
+        """With a single coalition the paper's rule degenerates to FedAvg."""
+        w = _rand_w(8, 40, seed=11)
+        state = coalitions.CoalitionState(center_idx=jnp.array([2], jnp.int32),
+                                          round=jnp.int32(0))
+        r = coalitions.run_round(w, state)
+        np.testing.assert_allclose(r.theta, aggregation.fedavg(w),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# --- aggregation & comm accounting ---------------------------------------------
+
+class TestAggregation:
+    def test_fedavg_uniform_and_weighted(self):
+        w = _rand_w(5, 20)
+        np.testing.assert_allclose(aggregation.fedavg(w),
+                                   np.asarray(w).mean(0), rtol=1e-6)
+        wt = jnp.array([1.0, 0, 0, 0, 0])
+        np.testing.assert_allclose(aggregation.fedavg(w, wt), w[0], rtol=1e-6)
+
+    def test_comm_savings(self):
+        flat = aggregation.comm_fedavg(10, 1000)
+        hier = aggregation.comm_coalition(10, 3, 1000)
+        assert flat.wan_up == 10 * 4000 and hier.wan_up == 3 * 4000
+        assert aggregation.wan_savings(10, 3) == pytest.approx(10 / 3)
+
+
+# --- pytree utilities ------------------------------------------------------------
+
+class TestPytree:
+    def test_flatten_roundtrip(self):
+        t = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+             "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+        v = pytree.flatten(t)
+        assert v.shape == (10,)
+        t2 = pytree.unflatten(v, t)
+        for l1, l2 in zip(jax.tree.leaves(t), jax.tree.leaves(t2)):
+            np.testing.assert_allclose(np.asarray(l1, np.float32),
+                                       np.asarray(l2, np.float32), rtol=1e-2)
+
+    def test_client_matrix_roundtrip(self):
+        ts = [{"w": jnp.full((3,), float(i)), "b": jnp.full((2, 2), float(-i))}
+              for i in range(4)]
+        stacked = pytree.stack_clients(ts)
+        m = pytree.client_matrix(stacked)
+        assert m.shape == (4, 7)
+        back = pytree.matrix_to_stacked(m, ts[0])
+        for l1, l2 in zip(jax.tree.leaves(stacked), jax.tree.leaves(back)):
+            np.testing.assert_allclose(l1, l2, rtol=1e-6)
+
+    @given(st.integers(1, 5), st.integers(1, 8), st.integers(0, 20))
+    @settings(max_examples=20, deadline=None)
+    def test_property_matrix_consistency(self, n, d, seed):
+        rng = np.random.default_rng(seed)
+        trees = [{"x": jnp.asarray(rng.standard_normal((d,)).astype(np.float32))}
+                 for _ in range(n)]
+        m = pytree.client_matrix(pytree.stack_clients(trees))
+        for i in range(n):
+            np.testing.assert_allclose(m[i], pytree.flatten(trees[i]), rtol=1e-6)
+
+
+class TestBeyondPaper:
+    def test_weighted_barycenters(self):
+        """§III.B extension: weighted average of member weights."""
+        w = _rand_w(4, 10)
+        a = jnp.array([0, 0, 1, 1])
+        cw = jnp.array([3.0, 1.0, 1.0, 1.0])
+        b, counts = barycenter.barycenters(w, a, 2, client_weights=cw)
+        want0 = (3 * np.asarray(w)[0] + np.asarray(w)[1]) / 4
+        np.testing.assert_allclose(b[0], want0, rtol=1e-5)
+        np.testing.assert_allclose(counts, [4.0, 2.0])
+        # uniform weights == unweighted
+        b2, _ = barycenter.barycenters(w, a, 2,
+                                       client_weights=jnp.ones(4))
+        b3, _ = barycenter.barycenters(w, a, 2)
+        np.testing.assert_allclose(b2, b3, rtol=1e-6)
+
+    def test_weighted_round(self):
+        w = _rand_w(6, 12, seed=3)
+        state = coalitions.init_centers(jax.random.key(0), w, 2)
+        r_u = coalitions.run_round(w, state)
+        r_w = coalitions.run_round(w, state,
+                                   client_weights=jnp.ones(6) * 2.0)
+        # equal weights (even scaled) leave barycenters unchanged
+        np.testing.assert_allclose(r_u.theta, r_w.theta, rtol=1e-5)
+
+    def test_selective_client_matrix(self):
+        """Router-only distance scope for MoE clients (DESIGN §5)."""
+        ts = [{"moe": {"router": jnp.full((2,), float(i)),
+                       "wi": jnp.full((4,), float(100 + i))},
+               "attn": {"wq": jnp.full((3,), float(-i))}} for i in range(3)]
+        stacked = pytree.stack_clients(ts)
+        m_all = pytree.client_matrix(stacked)
+        m_router = pytree.client_matrix(stacked,
+                                        select=lambda p: "router" in p)
+        assert m_all.shape == (3, 9)
+        assert m_router.shape == (3, 2)
+        np.testing.assert_allclose(m_router[1], [1.0, 1.0])
+        with pytest.raises(ValueError):
+            pytree.client_matrix(stacked, select=lambda p: "nope" in p)

@@ -1,0 +1,50 @@
+"""Multi-pod dry-run gate: run launch/dryrun.py as a SUBPROCESS (it forces
+512 host devices, which must not leak into this test process) for a sample of
+combos on both meshes.  The full 40-combo sweep is exercised by
+``python -m repro.launch.dryrun --all --mesh both`` (see EXPERIMENTS.md)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(*args, timeout=1500):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=ROOT)
+
+
+@pytest.mark.slow
+def test_dryrun_single_and_multi_pod():
+    r = _run_dryrun("--arch", "chatglm3-6b", "--shape", "decode_32k",
+                    "--mesh", "both")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "[16x16] chatglm3-6b" in r.stdout
+    assert "[2x16x16] chatglm3-6b" in r.stdout
+    assert "2 ok" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_skips_long500k_for_full_attention():
+    r = _run_dryrun("--arch", "phi3-medium-14b", "--shape", "long_500k")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "1 skipped" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_fl_round_at_scale():
+    r = _run_dryrun("--fl")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "FL coalition round" in r.stdout
+
+
+def test_local_devices_untouched():
+    """This test process must still see exactly one (real) CPU device."""
+    import jax
+
+    assert len(jax.devices()) == 1

@@ -1,0 +1,137 @@
+"""Per-kernel allclose vs the pure-jnp oracles, with shape/dtype sweeps
+(Pallas interpret mode on CPU executes the same kernel bodies the TPU gets)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels import flash_attention as fa
+from repro.kernels import pairwise_dist as pd
+from repro.kernels import segment_mean as sm
+
+
+@pytest.mark.parametrize("n,d,dtype", [
+    (4, 257, jnp.float32), (10, 5000, jnp.float32), (16, 16384, jnp.float32),
+    (10, 5000, jnp.bfloat16), (3, 128, jnp.float32), (32, 1000, jnp.float32),
+])
+def test_pairwise_sweep(n, d, dtype):
+    w = jax.random.normal(jax.random.key(n * d), (n, d), jnp.float32).astype(dtype)
+    got = pd.pairwise_sq_dists(w, block_d=4096, interpret=True)
+    want = ref.pairwise_sq_dists(w)
+    scale = float(jnp.max(want)) + 1e-6
+    np.testing.assert_allclose(got / scale, want / scale,
+                               rtol=0, atol=5e-3 if dtype == jnp.bfloat16 else 5e-6)
+
+
+@pytest.mark.parametrize("n,k,d", [(10, 3, 1000), (7, 2, 129), (16, 8, 8192)])
+def test_to_points_sweep(n, k, d):
+    w = jax.random.normal(jax.random.key(1), (n, d), jnp.float32)
+    p = jax.random.normal(jax.random.key(2), (k, d), jnp.float32)
+    got = pd.sq_dists_to_points(w, p, block_d=2048, interpret=True)
+    want = ref.sq_dists_to_points(w, p)
+    scale = float(jnp.max(want))
+    np.testing.assert_allclose(got / scale, want / scale, atol=5e-6)
+
+
+@pytest.mark.parametrize("k,n,d", [(3, 10, 1000), (8, 32, 4097), (2, 4, 64)])
+def test_segment_sum_sweep(k, n, d):
+    assign = jax.random.randint(jax.random.key(3), (n,), 0, k)
+    onehot = jax.nn.one_hot(assign, k).T
+    w = jax.random.normal(jax.random.key(4), (n, d), jnp.float32)
+    got = sm.segment_sum(onehot, w, block_d=512, interpret=True)
+    want = ref.segment_sum(onehot, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@given(st.integers(2, 9), st.integers(1, 40), st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_pairwise_property_matches_numpy(n, d, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    got = np.asarray(pd.pairwise_sq_dists(w, block_d=32, interpret=True))
+    wn = np.asarray(w)
+    want = ((wn[:, None] - wn[None, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# --- flash attention -------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,sq,skv,dh,causal,window", [
+    (1, 4, 1, 128, 128, 64, True, None),     # GQA causal
+    (2, 8, 2, 256, 256, 64, True, None),
+    (1, 2, 2, 64, 64, 128, False, None),     # MHA bidirectional
+    (1, 4, 4, 100, 100, 80, True, None),     # unaligned seq + head dim (pad)
+    (2, 4, 2, 1, 300, 64, True, None),       # decode: q=1 vs long cache
+    (1, 4, 1, 256, 256, 64, True, 64),       # sliding window
+    (1, 4, 2, 64, 192, 64, True, None),      # queries at end of timeline
+])
+def test_flash_sweep(b, hq, hkv, sq, skv, dh, causal, window):
+    kq, kk, kv = jax.random.split(jax.random.key(sq * skv + hq), 3)
+    q = jax.random.normal(kq, (b, hq, sq, dh), jnp.float32)
+    k = jax.random.normal(kk, (b, hkv, skv, dh), jnp.float32)
+    v = jax.random.normal(kv, (b, hkv, skv, dh), jnp.float32)
+    got = fa.flash_attention(q, k, v, causal=causal, window=window,
+                             block_q=64, block_k=64, interpret=True)
+    want = ref.attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    q = jax.random.normal(jax.random.key(0), (1, 4, 128, 64)).astype(dtype)
+    k = jax.random.normal(jax.random.key(1), (1, 2, 128, 64)).astype(dtype)
+    v = jax.random.normal(jax.random.key(2), (1, 2, 128, 64)).astype(dtype)
+    got = fa.flash_attention(q, k, v, interpret=True)
+    want = ref.attention(q, k, v)
+    assert got.dtype == dtype
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_grad_matches_ref():
+    q = jax.random.normal(jax.random.key(5), (1, 4, 64, 64), jnp.float32)
+    k = jax.random.normal(jax.random.key(6), (1, 2, 64, 64), jnp.float32)
+    v = jax.random.normal(jax.random.key(7), (1, 2, 64, 64), jnp.float32)
+    g1 = jax.grad(lambda q_: ops.flash_attention(q_, k, v).sum())(q)
+    g2 = jax.grad(lambda q_: ref.attention(q_, k, v).sum())(q)
+    np.testing.assert_allclose(g1, g2, rtol=2e-3, atol=2e-3)
+
+
+def test_ops_route_through_core():
+    """core.distance / core.barycenter pallas backend == xla backend."""
+    from repro.core import barycenter as bc
+    from repro.core import distance as dist
+
+    w = jax.random.normal(jax.random.key(8), (10, 3000), jnp.float32)
+    np.testing.assert_allclose(dist.pairwise_sq_dists(w, backend="pallas"),
+                               dist.pairwise_sq_dists(w, backend="xla"),
+                               rtol=1e-4, atol=1e-2)
+    a = jax.random.randint(jax.random.key(9), (10,), 0, 3)
+    b1, c1 = bc.barycenters(w, a, 3, backend="pallas")
+    b2, c2 = bc.barycenters(w, a, 3, backend="xla")
+    np.testing.assert_allclose(b1, b2, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(c1, c2)
+
+
+def test_model_forward_with_flash_kernel_matches_xla():
+    """The model's attention path through the Pallas kernel == XLA path."""
+    import dataclasses
+
+    from repro.configs import get, reduced
+    from repro.models import layers, transformer as tfm
+
+    cfg = dataclasses.replace(reduced(get("starcoder2-7b")), n_layers=1)
+    params = tfm.init(jax.random.key(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (1, 16), 0,
+                                          cfg.vocab)}
+    ref_logits, _ = tfm.forward(params, cfg, batch)
+    layers.set_flash_kernel(True)
+    try:
+        k_logits, _ = tfm.forward(params, cfg, batch)
+    finally:
+        layers.set_flash_kernel(False)
+    np.testing.assert_allclose(np.asarray(k_logits), np.asarray(ref_logits),
+                               rtol=2e-3, atol=2e-3)

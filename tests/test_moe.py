@@ -1,0 +1,138 @@
+"""MoE layer: routing semantics, capacity behaviour, load-balance aux."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe
+from repro.models.config import ModelConfig
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="moe", n_layers=1, d_model=32, n_heads=2,
+                n_kv_heads=2, d_ff=48, vocab=64, moe=True, n_experts=4,
+                top_k=2, capacity_factor=100.0, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _dense_ref(params, cfg, x):
+    """Oracle: every expert processes every token; combine by top-k gates."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = xt @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, cfg.top_k)
+    gate = gate / gate.sum(-1, keepdims=True)
+    h = jnp.einsum("td,edf->tef", xt, params["wi_gate"])
+    u = jnp.einsum("td,edf->tef", xt, params["wi_up"])
+    y = jnp.einsum("tef,efd->ted", jax.nn.silu(h) * u, params["wo"])
+    onehot = jax.nn.one_hot(idx, cfg.n_experts)          # (T, K, E)
+    w = jnp.einsum("tk,tke->te", gate, onehot)           # (T, E)
+    out = jnp.einsum("te,ted->td", w, y)
+    return out.reshape(b, s, d)
+
+
+def test_matches_dense_oracle_with_full_capacity():
+    cfg = _cfg()
+    params = moe.moe_init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model), jnp.float32)
+    got, aux = moe.moe_apply(params, cfg, x)
+    want = _dense_ref(params, cfg, x)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    assert jnp.isfinite(aux)
+
+
+def test_capacity_drops_tokens():
+    """With capacity 4 (the floor) a 64-token batch must drop expert load."""
+    cfg = _cfg(capacity_factor=1e-6)
+    params = moe.moe_init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(2), (4, 16, cfg.d_model), jnp.float32)
+    got, _ = moe.moe_apply(params, cfg, x)
+    want = _dense_ref(params, cfg, x)
+    assert not np.allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+    assert np.isfinite(np.asarray(got)).all()
+
+
+def test_capacity_helper():
+    cfg = _cfg(capacity_factor=1.25)
+    assert moe.capacity(cfg, 1024) == -(-1.25 * 1024 * 2 // 4)
+    assert moe.capacity(_cfg(capacity_factor=1e-9), 8) == 4   # floor
+
+
+def test_aux_loss_uniform_router_is_one():
+    """Switch aux = E * Σ f_e p_e -> 1.0 exactly under uniform routing."""
+    cfg = _cfg(n_experts=4, top_k=1)
+    params = moe.moe_init(jax.random.key(0), cfg)
+    params = dict(params, router=jnp.zeros_like(params["router"]))
+    x = jax.random.normal(jax.random.key(3), (2, 32, cfg.d_model), jnp.float32)
+    _, aux = moe.moe_apply(params, cfg, x)
+    # uniform probs: p_e = 1/E; ties routed to expert 0 -> f concentrates,
+    # but Σ f_e p_e = 1/E regardless => aux == 1
+    np.testing.assert_allclose(float(aux), 1.0, rtol=1e-5)
+
+
+def test_grads_flow_to_experts_and_router():
+    cfg = _cfg()
+    params = moe.moe_init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(4), (1, 8, cfg.d_model), jnp.float32)
+
+    def loss(p):
+        out, aux = moe.moe_apply(p, cfg, x)
+        return jnp.sum(out ** 2) + aux
+
+    g = jax.grad(loss)(params)
+    for name in ("router", "wi_gate", "wi_up", "wo"):
+        assert float(jnp.sum(jnp.abs(g[name]))) > 0, name
+
+
+def test_expert_parallel_matches_oracle():
+    """shard_map EP implementation == global dispatch (host mesh, R=1)."""
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = _cfg()
+    params = moe.moe_init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model), jnp.float32)
+    ref, aux_ref = moe._moe_apply_gspmd(params, cfg, x)
+    mesh = make_host_mesh()
+    with mesh:
+        got, aux = jax.jit(
+            lambda p, x_: moe.moe_apply_ep(p, cfg, x_, mesh=mesh))(params, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(aux), float(aux_ref), rtol=1e-5)
+
+
+def test_expert_parallel_enable_routes(monkeypatch):
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = _cfg()
+    params = moe.moe_init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(2), (1, 8, cfg.d_model), jnp.float32)
+    ref, _ = moe.moe_apply(params, cfg, x)       # EP disabled -> gspmd path
+    mesh = make_host_mesh()
+    moe.enable_expert_parallel(mesh)
+    try:
+        with mesh:
+            got, _ = jax.jit(lambda p, x_: moe.moe_apply(p, cfg, x_))(params, x)
+    finally:
+        moe.disable_expert_parallel()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_expert_parallel_grads():
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = _cfg()
+    params = moe.moe_init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(3), (1, 8, cfg.d_model), jnp.float32)
+    mesh = make_host_mesh()
+    with mesh:
+        g = jax.grad(
+            lambda p: moe.moe_apply_ep(p, cfg, x, mesh=mesh)[0].sum())(params)
+    for name in ("router", "wi_gate", "wi_up", "wo"):
+        assert np.isfinite(np.asarray(g[name])).all(), name
+        assert float(jnp.sum(jnp.abs(g[name]))) > 0, name

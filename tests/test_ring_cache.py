@@ -1,0 +1,54 @@
+"""Sliding-window ring-buffer KV cache (the long_500k perf optimization):
+decode with an O(window) ring cache must produce the same logits as decode
+with the full O(seq) cache, because the window mask makes everything beyond
+the last `window` positions unreachable anyway."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get, reduced
+from repro.models import transformer as tf
+
+
+@pytest.fixture(scope="module")
+def hymba():
+    cfg = reduced(get("hymba-1.5b"))           # window = 32 in reduced form
+    cfg = dataclasses.replace(cfg, window=8)   # tiny window: wrap quickly
+    return cfg, tf.init(jax.random.key(0), cfg)
+
+
+def _decode_n(cfg, params, cache, toks):
+    outs = []
+    for t in range(toks.shape[1]):
+        logits, cache = tf.decode_step(params, cfg, toks[:, t], cache)
+        outs.append(logits)
+    return jnp.stack(outs, 1), cache
+
+
+def test_ring_matches_full_cache(hymba):
+    cfg, params = hymba
+    b, n = 2, 24                               # 24 tokens >> window 8: wraps 3x
+    toks = jax.random.randint(jax.random.key(1), (b, n), 0, cfg.vocab)
+    full = tf.init_cache(cfg, b, n + 1)
+    ring = tf.init_cache(cfg, b, n + 1, ring=True)
+    assert ring["k"].shape[3] == cfg.window
+    assert full["k"].shape[3] == n + 1
+    lf, _ = _decode_n(cfg, params, full, toks)
+    lr, _ = _decode_n(cfg, params, ring, toks)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lf),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ring_memory_is_window_bounded(hymba):
+    cfg, _ = hymba
+    ring = tf.init_cache(cfg, 1, 10_000, ring=True)
+    assert ring["k"].shape[3] == cfg.window    # not 10_000
+
+
+def test_ring_noop_for_full_attention():
+    cfg = reduced(get("starcoder2-7b"))        # window=None
+    cache = tf.init_cache(cfg, 1, 64, ring=True)
+    assert cache["k"].shape[3] == 64
