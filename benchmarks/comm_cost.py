@@ -40,9 +40,13 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--coalitions", type=int, default=3)
+    ap.add_argument("--bytes-per-param", type=int, default=4)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    rows = table(args.clients, args.coalitions)
+    try:
+        rows = table(args.clients, args.coalitions, args.bytes_per_param)
+    except ValueError as e:                      # k > clients etc.
+        ap.error(str(e))
     hdr = f"{'model':26s} {'params':>14s} {'fedavg WAN↑':>12s} {'coal WAN↑':>12s} {'savings':>8s}"
     print(hdr)
     print("-" * len(hdr))

@@ -1,11 +1,12 @@
-"""Quickstart: the paper's coalition mechanism in 40 lines.
+"""Quickstart: the paper's coalition mechanism, then the same mechanism as a
+registered *strategy* — the pluggable-aggregation API every scenario uses.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation, coalitions, pytree
+from repro.core import aggregation, backends, coalitions, pytree, strategies
 
 # --- three synthetic "device populations" in weight space -----------------------
 key = jax.random.key(0)
@@ -36,3 +37,19 @@ flat = aggregation.comm_fedavg(n_clients=12, d=1000)
 hier = aggregation.comm_coalition(n_clients=12, k=3, d=1000)
 print(f"WAN uplink/round: fedavg={flat.wan_up}B  coalition={hier.wan_up}B "
       f"({aggregation.wan_savings(12, 3):.1f}x saving)")
+
+# --- choosing a strategy + backend: the pluggable aggregation API ----------------
+# Every aggregation rule is a registered Strategy with a uniform contract:
+#   init_state(key, w0) -> state;  round(w, state) -> RoundResult.
+# The compute backend ('xla' | 'dot' | 'pallas') resolves through its own
+# registry, so swapping the distance/barycenter kernels is a config string.
+print("\nregistered strategies:", strategies.available_strategies())
+print("registered backends:  ", backends.available_backends())
+
+for name in ("fedavg", "coalition", "coalition_topk", "fedavg_trimmed"):
+    strat = strategies.make_strategy(name, n_clients=12, n_coalitions=3,
+                                     backend="xla", top_m=2, trim=2)
+    state = strat.init_state(jax.random.key(2), clients)
+    res = strat.round(clients, state)                # -> theta, state, metrics
+    print(f"  {name:16s} ||θ|| = {float(jnp.linalg.norm(res.theta)):8.3f}  "
+          f"counts = {[int(c) for c in res.metrics.counts]}")

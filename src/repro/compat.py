@@ -1,0 +1,17 @@
+"""Version-compatibility shims for the jax API surface.
+
+``shard_map``: jax >= 0.5 exposes ``jax.shard_map(check_vma=...)`` at the top
+level; 0.4.x has it under ``jax.experimental.shard_map`` with the ``check_rep``
+keyword instead.  Import it from here so the fallback lives in one place.
+"""
+from __future__ import annotations
+
+import jax
+
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)

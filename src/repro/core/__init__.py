@@ -4,11 +4,14 @@ Public API:
   distance.pairwise_dists / sq_dists_to_points   (§III.A)
   barycenter.barycenters / medoids               (§III.B, Step III)
   coalitions.init_centers / run_round            (Algorithm 1)
-  aggregation.fedavg / coalition_round / comm_*  (baseline + comm accounting)
-  client.client_update, server.run_federation    (orchestration)
+  aggregation.fedavg / trimmed_mean / comm_*     (flat rules + comm accounting)
+  backends.register_backend / get_backend        (xla | dot | pallas primitives)
+  strategies.register_strategy / make_strategy   (pluggable aggregation rules)
+  client.client_update                           (local phase)
+  server.Federation / run_federation             (scanned round engine)
 """
-from repro.core import (aggregation, barycenter, client, coalitions, distance,
-                        pytree, server)
+from repro.core import (aggregation, backends, barycenter, client, coalitions,
+                        distance, pytree, server, strategies)
 
-__all__ = ["aggregation", "barycenter", "client", "coalitions", "distance",
-           "pytree", "server"]
+__all__ = ["aggregation", "backends", "barycenter", "client", "coalitions",
+           "distance", "pytree", "server", "strategies"]

@@ -3,6 +3,8 @@
 ``fedavg``            — the paper's baseline (uniform client mean; the paper's
                         setup gives every client an equal-size shard, so the
                         n_k/n weighting degenerates to 1/N).
+``trimmed_mean``      — coordinate-wise trimmed mean (robust-aggregation
+                        family; used by the ``fedavg_trimmed`` strategy).
 ``coalition_round``   — the paper's proposed rule (mean of coalition
                         barycenters, Algorithm 1).
 ``CommModel``         — byte accounting for the paper's "communication-
@@ -17,6 +19,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import backends as bk
 from repro.core import coalitions as co
 
 
@@ -34,8 +37,25 @@ def fedavg(w: jax.Array, weights: jax.Array | None = None) -> jax.Array:
     return wts @ w.astype(jnp.float32)
 
 
+def trimmed_mean(w: jax.Array, trim: int) -> jax.Array:
+    """Coordinate-wise trimmed mean over the (N, D) client weight matrix.
+
+    Sorts each parameter across clients and drops the ``trim`` largest and
+    smallest values before averaging — the classical robust aggregation rule
+    (tolerates up to ``trim`` arbitrary outlier clients per coordinate).
+    ``trim=0`` is exactly uniform FedAvg.
+    """
+    n = w.shape[0]
+    if not 0 <= 2 * trim < n:
+        raise ValueError(f"trim={trim} must satisfy 0 <= 2*trim < n={n}")
+    if trim == 0:
+        return fedavg(w)
+    ws = jnp.sort(w.astype(jnp.float32), axis=0)
+    return jnp.mean(ws[trim:n - trim], axis=0)
+
+
 def coalition_round(w: jax.Array, state: co.CoalitionState, *,
-                    backend: str = "xla") -> co.CoalitionRound:
+                    backend: str | bk.Backend = "xla") -> co.CoalitionRound:
     return co.run_round(w, state, backend=backend)
 
 
@@ -48,8 +68,22 @@ class CommModel(NamedTuple):
     edge_down: int
 
 
+def _check_comm_args(n_clients: int, d: int, bytes_per_param: int,
+                     k: int | None = None) -> None:
+    if n_clients < 1:
+        raise ValueError(f"n_clients={n_clients} must be >= 1")
+    if d < 1:
+        raise ValueError(f"d={d} must be >= 1")
+    if bytes_per_param < 1:
+        raise ValueError(f"bytes_per_param={bytes_per_param} must be >= 1")
+    if k is not None and not 1 <= k <= n_clients:
+        raise ValueError(
+            f"k={k} coalitions must satisfy 1 <= k <= n_clients={n_clients}")
+
+
 def comm_fedavg(n_clients: int, d: int, bytes_per_param: int = 4) -> CommModel:
     """Flat FedAvg: every client uploads its full model to the server."""
+    _check_comm_args(n_clients, d, bytes_per_param)
     m = d * bytes_per_param
     return CommModel(wan_up=n_clients * m, wan_down=n_clients * m,
                      edge_up=0, edge_down=0)
@@ -63,6 +97,7 @@ def comm_coalition(n_clients: int, k: int, d: int,
     coalition barycenters cross the WAN.  This is the structured-update saving
     the paper's abstract/conclusion claims: WAN uplink shrinks by N/K.
     """
+    _check_comm_args(n_clients, d, bytes_per_param, k=k)
     m = d * bytes_per_param
     return CommModel(
         wan_up=k * m,
@@ -74,4 +109,5 @@ def comm_coalition(n_clients: int, k: int, d: int,
 
 def wan_savings(n_clients: int, k: int) -> float:
     """Multiplicative WAN-uplink saving of the coalition schedule vs FedAvg."""
+    _check_comm_args(n_clients, d=1, bytes_per_param=1, k=k)
     return n_clients / k

@@ -1,0 +1,87 @@
+"""Compute-backend registry for the distance/barycenter primitives.
+
+The coalition engine needs exactly three array primitives:
+
+  ``pairwise_sq_dists(w) -> (N, N)``        — §III.A distance matrix
+  ``sq_dists_to_points(w, p) -> (N, K)``    — assignment + medoid distances
+  ``segment_sum(onehot, w) -> (K, D)``      — §III.B barycenter reduction
+
+A :class:`Backend` bundles one implementation of each.  Implementations
+register themselves under a name (``'xla'``, ``'dot'``, ``'pallas'``) and the
+rest of the stack resolves backends through :func:`get_backend` instead of
+plumbing string kwargs through every call layer — adding a backend (e.g. a
+GPU Triton port) is one ``register_backend`` call, not a cross-module edit.
+
+``distance.py`` registers the ``'xla'``/``'dot'`` reference implementations at
+import time; the ``'pallas'`` backend lazily imports the kernel wrappers so a
+missing TPU toolchain never breaks CPU-only use.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+
+
+class Backend(NamedTuple):
+    """One implementation of the three coalition-engine primitives.
+
+    Each callable may accept (and ignore) extra keyword tuning knobs such as
+    ``chunk=`` so callers can pass hints without knowing the implementation.
+    """
+
+    name: str
+    pairwise_sq_dists: Callable[..., jax.Array]
+    sq_dists_to_points: Callable[..., jax.Array]
+    segment_sum: Callable[..., jax.Array]
+
+
+_BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> Backend:
+    """Register (or override) a backend under ``backend.name``."""
+    _BACKENDS[backend.name] = backend
+    return backend
+
+
+def get_backend(backend: str | Backend) -> Backend:
+    """Resolve a backend name (or pass a :class:`Backend` through)."""
+    if isinstance(backend, Backend):
+        return backend
+    try:
+        return _BACKENDS[backend]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {backend!r}; available: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def _register_pallas() -> None:
+    """'pallas' resolves the kernel wrappers lazily, at first call."""
+
+    def _pairwise(w, **kw):
+        from repro.kernels import ops as kops
+
+        return kops.pairwise_sq_dists(w)
+
+    def _to_points(w, p, **kw):
+        from repro.kernels import ops as kops
+
+        return kops.sq_dists_to_points(w, p)
+
+    def _segment_sum(onehot, w, **kw):
+        from repro.kernels import ops as kops
+
+        return kops.segment_sum(onehot, w)
+
+    register_backend(Backend(name="pallas", pairwise_sq_dists=_pairwise,
+                             sq_dists_to_points=_to_points,
+                             segment_sum=_segment_sum))
+
+
+_register_pallas()

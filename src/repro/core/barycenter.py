@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import backends as bk
 from repro.core import distance
 
 
@@ -21,7 +22,7 @@ def coalition_onehot(assignment: jax.Array, k: int) -> jax.Array:
 
 def barycenters(w: jax.Array, assignment: jax.Array, k: int, *,
                 fallback: jax.Array | None = None,
-                backend: str = "xla",
+                backend: str | bk.Backend = "xla",
                 client_weights: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
     """Coalition barycenters.
 
@@ -30,7 +31,7 @@ def barycenters(w: jax.Array, assignment: jax.Array, k: int, *,
       assignment: (N,) int coalition index per client.
       k: number of coalitions (static).
       fallback: (K, D) weights used for empty coalitions (previous centers).
-      backend: 'xla' or 'pallas' (segment-mean kernel).
+      backend: registry name ('xla' | 'dot' | 'pallas') or a Backend.
       client_weights: optional (N,) non-negative importances (e.g. shard
         sizes) — the paper's §III.B "weighted average" extension; uniform
         (the paper's default) when None.
@@ -43,12 +44,7 @@ def barycenters(w: jax.Array, assignment: jax.Array, k: int, *,
     if client_weights is not None:
         onehot = onehot * client_weights.astype(jnp.float32)[None, :]
     counts = jnp.sum(onehot, axis=1)                  # (K,)
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-
-        sums = kops.segment_sum(onehot, w)
-    else:
-        sums = onehot @ w.astype(jnp.float32)         # (K, D)
+    sums = bk.get_backend(backend).segment_sum(onehot, w)   # (K, D)
     denom = jnp.maximum(counts, 1.0)[:, None]
     b = sums / denom
     if fallback is not None:
@@ -58,7 +54,7 @@ def barycenters(w: jax.Array, assignment: jax.Array, k: int, *,
 
 
 def medoids(w: jax.Array, bary: jax.Array, assignment: jax.Array, *,
-            backend: str = "xla") -> jax.Array:
+            backend: str | bk.Backend = "xla") -> jax.Array:
     """Paper Step III center update: new center v_j = argmin_{u_i} d(ω_i, b_j).
 
     Restricted to members of coalition j (the algorithm reassigns a *user* as

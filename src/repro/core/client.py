@@ -44,6 +44,10 @@ def client_update(loss_fn: Callable[[PyTree, PyTree], jax.Array],
     n = jax.tree.leaves(data)[0].shape[0]
     bs = cfg.batch_size
     steps_per_epoch = n // bs
+    if steps_per_epoch < 1:
+        raise ValueError(
+            f"batch_size={bs} exceeds the client shard size n={n}: "
+            "no full minibatch can be formed (mean loss would be NaN)")
     opt = opt_mod.sgd(cfg.lr, momentum=cfg.momentum)
     opt_state = opt.init(params)
     grad_fn = jax.value_and_grad(loss_fn)

@@ -21,6 +21,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import backends as bk
 from repro.core import barycenter as bary_mod
 from repro.core import distance
 
@@ -76,7 +77,8 @@ def init_centers(key: jax.Array, w: jax.Array, k: int) -> CoalitionState:
     return CoalitionState(center_idx=sel.astype(jnp.int32), round=jnp.int32(0))
 
 
-def assign(w: jax.Array, center_idx: jax.Array, *, backend: str = "xla") -> jax.Array:
+def assign(w: jax.Array, center_idx: jax.Array, *,
+           backend: str | bk.Backend = "xla") -> jax.Array:
     """Step II: each client joins the coalition with the nearest center.
 
     Center clients are pinned to their own coalition (the paper iterates over
@@ -93,13 +95,15 @@ def assign(w: jax.Array, center_idx: jax.Array, *, backend: str = "xla") -> jax.
     return jnp.where(pin >= 0, pin, a)
 
 
-def run_round(w: jax.Array, state: CoalitionState, *, backend: str = "xla",
+def run_round(w: jax.Array, state: CoalitionState, *,
+              backend: str | bk.Backend = "xla",
               client_weights: jax.Array | None = None) -> CoalitionRound:
     """One full Algorithm-1 server round over fresh client weights ``w``.
 
     ``client_weights``: optional (N,) importances for the §III.B weighted-
     barycenter extension (uniform = the paper's Algorithm 1).
     """
+    backend = bk.get_backend(backend)      # resolve once for the whole round
     k = state.center_idx.shape[0]
     assignment = assign(w, state.center_idx, backend=backend)
     prev_centers = w[state.center_idx].astype(jnp.float32)

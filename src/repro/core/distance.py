@@ -4,15 +4,24 @@
 
 For framework-scale models D ranges from ~1.6e6 (the paper's CNN) to ~1e12
 (kimi-k2), so the (N, D) weight matrix never materialises distances naively:
-everything is computed as chunked partial sums over D.  ``backend='pallas'``
-routes the chunked accumulation through the Pallas kernel in
-``repro.kernels.pairwise_dist`` (TPU target, interpret-mode on CPU);
-``backend='xla'`` is the pure-jnp reference used by default on CPU.
+everything is computed as chunked partial sums over D.  The concrete
+implementation is selected through the :mod:`repro.core.backends` registry:
+
+  ``'xla'``     — exact streaming diff-form (pure jnp; CPU default)
+  ``'dot'``     — Gram form, collective-efficient under GSPMD sharding
+  ``'pallas'``  — TPU kernels in ``repro.kernels`` (interpret-mode on CPU)
+
+This module registers ``'xla'`` and ``'dot'`` at import time (including their
+``segment_sum`` barycenter reduction — a one-hot matmul); the public functions
+below resolve whichever name (or :class:`~repro.core.backends.Backend`
+instance) the caller passes.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import backends as bk
 
 
 def _pairwise_sq_xla(w: jax.Array, chunk: int) -> jax.Array:
@@ -48,49 +57,7 @@ def _pairwise_sq_dot(w: jax.Array) -> jax.Array:
     return jnp.maximum(d2, 0.0) * (1.0 - jnp.eye(n, dtype=jnp.float32))
 
 
-def pairwise_sq_dists(w: jax.Array, *, chunk: int = 65536, backend: str = "xla") -> jax.Array:
-    """Squared pairwise Euclidean distances of client weight vectors.
-
-    Args:
-      w: (N, D) client weight matrix (rows are flattened models).
-      chunk: D-chunk size for streaming accumulation.
-      backend: 'xla' (exact streaming diff-form, default), 'dot' (Gram form,
-        collective-efficient under sharding), or 'pallas' (TPU kernel).
-
-    Returns:
-      (N, N) float32 matrix of squared distances.
-    """
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-
-        return kops.pairwise_sq_dists(w)
-    if backend == "dot":
-        return _pairwise_sq_dot(w)
-    return _pairwise_sq_xla(w.astype(jnp.float32), chunk)
-
-
-def pairwise_dists(w: jax.Array, **kw) -> jax.Array:
-    """The paper's d(ω_i, ω_j): element-wise sqrt of squared distances."""
-    return jnp.sqrt(jnp.maximum(pairwise_sq_dists(w, **kw), 0.0))
-
-
-def sq_dists_to_points(w: jax.Array, points: jax.Array, *, chunk: int = 65536,
-                       backend: str = "xla") -> jax.Array:
-    """(N, K) squared distances from each client row to each point row.
-
-    Used both for assignment (points = coalition-center weights) and for the
-    medoid step (points = barycenters).
-    """
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-
-        return kops.sq_dists_to_points(w, points)
-    if backend == "dot":
-        wf, pf = w.astype(jnp.float32), points.astype(jnp.float32)
-        cross = wf @ pf.T
-        d2 = (jnp.sum(wf * wf, 1)[:, None] + jnp.sum(pf * pf, 1)[None, :]
-              - 2.0 * cross)
-        return jnp.maximum(d2, 0.0)
+def _to_points_sq_xla(w: jax.Array, points: jax.Array, chunk: int) -> jax.Array:
     n, d = w.shape
     k = points.shape[0]
     pad = (-d) % chunk
@@ -108,6 +75,66 @@ def sq_dists_to_points(w: jax.Array, points: jax.Array, *, chunk: int = 65536,
 
     acc, _ = jax.lax.scan(body, jnp.zeros((n, k), jnp.float32), (wc, pc))
     return acc
+
+
+def _to_points_sq_dot(w: jax.Array, points: jax.Array) -> jax.Array:
+    wf, pf = w.astype(jnp.float32), points.astype(jnp.float32)
+    cross = wf @ pf.T
+    d2 = (jnp.sum(wf * wf, 1)[:, None] + jnp.sum(pf * pf, 1)[None, :]
+          - 2.0 * cross)
+    return jnp.maximum(d2, 0.0)
+
+
+def _segment_sum_matmul(onehot: jax.Array, w: jax.Array) -> jax.Array:
+    """(K, N) one-hot × (N, D) weights — MXU does the segment reduction."""
+    return onehot @ w.astype(jnp.float32)
+
+
+bk.register_backend(bk.Backend(
+    name="xla",
+    pairwise_sq_dists=lambda w, chunk=65536, **kw: _pairwise_sq_xla(
+        w.astype(jnp.float32), chunk),
+    sq_dists_to_points=lambda w, p, chunk=65536, **kw: _to_points_sq_xla(
+        w, p, chunk),
+    segment_sum=lambda onehot, w, **kw: _segment_sum_matmul(onehot, w),
+))
+
+bk.register_backend(bk.Backend(
+    name="dot",
+    pairwise_sq_dists=lambda w, **kw: _pairwise_sq_dot(w),
+    sq_dists_to_points=lambda w, p, **kw: _to_points_sq_dot(w, p),
+    segment_sum=lambda onehot, w, **kw: _segment_sum_matmul(onehot, w),
+))
+
+
+def pairwise_sq_dists(w: jax.Array, *, chunk: int = 65536,
+                      backend: str | bk.Backend = "xla") -> jax.Array:
+    """Squared pairwise Euclidean distances of client weight vectors.
+
+    Args:
+      w: (N, D) client weight matrix (rows are flattened models).
+      chunk: D-chunk size hint for streaming accumulation (xla backend).
+      backend: registry name ('xla' | 'dot' | 'pallas') or a Backend.
+
+    Returns:
+      (N, N) float32 matrix of squared distances.
+    """
+    return bk.get_backend(backend).pairwise_sq_dists(w, chunk=chunk)
+
+
+def pairwise_dists(w: jax.Array, **kw) -> jax.Array:
+    """The paper's d(ω_i, ω_j): element-wise sqrt of squared distances."""
+    return jnp.sqrt(jnp.maximum(pairwise_sq_dists(w, **kw), 0.0))
+
+
+def sq_dists_to_points(w: jax.Array, points: jax.Array, *, chunk: int = 65536,
+                       backend: str | bk.Backend = "xla") -> jax.Array:
+    """(N, K) squared distances from each client row to each point row.
+
+    Used both for assignment (points = coalition-center weights) and for the
+    medoid step (points = barycenters).
+    """
+    return bk.get_backend(backend).sq_dists_to_points(w, points, chunk=chunk)
 
 
 def dists_to_points(w: jax.Array, points: jax.Array, **kw) -> jax.Array:

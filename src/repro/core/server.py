@@ -1,21 +1,42 @@
-"""Federated orchestration — the paper's outer loop (Algorithm 1) plus the
-FedAvg baseline, as a host-side loop around fully-jitted round programs.
+"""Strategy-driven federation engine.
 
-One jitted ``round_fn`` performs: broadcast -> vmapped ClientUpdate over all
-clients -> weight-matrix view -> aggregation (FedAvg or coalition round).
-Per-round metrics (loss, accuracy, coalition structure) are recorded in a
-``History`` for the benchmark harness to plot Figs. 2-4.
+The paper's outer loop (Algorithm 1) and its FedAvg baseline are two
+:mod:`repro.core.strategies` entries; this module is only the *engine* that
+drives an arbitrary registered strategy:
+
+  broadcast θ -> vmapped ClientUpdate over all clients -> (N, D) weight
+  matrix -> ``strategy.round(w, state)`` -> new θ + next state + metrics
+
+Two interchangeable engines execute that round program:
+
+  ``'scan'``    (default) — the whole federation (all R rounds, eval
+                included) is ONE jitted ``jax.lax.scan`` program: zero
+                host round-trips, zero per-round dispatch overhead, and
+                the :class:`History` comes back as stacked device arrays.
+  ``'python'``  — the legacy host-side loop (one jitted round per step);
+                kept for debugging and as the benchmark baseline
+                (``benchmarks/run.py`` reports scan-vs-python wall clock).
+
+Both engines follow the identical PRNG-split discipline, so on a fixed seed
+they produce the same per-round θ and :class:`History` (tested in
+``tests/test_strategies.py``).  Per-round metrics (loss, accuracy, coalition
+structure) land in a :class:`History` whose list-based view (``.rounds``,
+``.test_acc``, ...) is preserved as compatibility properties for the
+benchmark harness (Figs. 2-4).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import aggregation, coalitions, pytree
+from repro.core import pytree, strategies
 from repro.core.client import ClientConfig, client_update
+from repro.core.strategies import RoundMetrics, Strategy
 
 PyTree = Any
 
@@ -24,57 +45,194 @@ class FederationConfig(NamedTuple):
     n_clients: int = 10
     n_coalitions: int = 3
     rounds: int = 30
-    method: str = "coalition"          # 'coalition' | 'fedavg'
+    method: str = "coalition"          # any registered strategy name
     client: ClientConfig = ClientConfig()
-    backend: str = "xla"               # distance/barycenter backend
+    backend: str = "xla"               # distance/barycenter backend name
+    engine: str = "scan"               # 'scan' (fully jitted) | 'python'
+
+
+class Trace(NamedTuple):
+    """Stacked per-round device arrays for R rounds (the scan outputs)."""
+
+    loss: jax.Array        # (R,)   mean client training loss
+    acc: jax.Array         # (R,)   test accuracy of θ^(r)
+    assignment: jax.Array  # (R, N) per-client group id
+    counts: jax.Array      # (R, K) group sizes
 
 
 @dataclasses.dataclass
 class History:
-    rounds: list[int] = dataclasses.field(default_factory=list)
-    train_loss: list[float] = dataclasses.field(default_factory=list)
-    test_acc: list[float] = dataclasses.field(default_factory=list)
-    assignments: list[list[int]] = dataclasses.field(default_factory=list)
-    counts: list[list[int]] = dataclasses.field(default_factory=list)
+    """Federation history as stacked arrays, with the legacy list view.
+
+    The engine produces a :class:`Trace` of device arrays (one stacked array
+    per metric — what a scanned loop naturally emits).  The list-based
+    attributes of the old ``History`` (``rounds``, ``train_loss``,
+    ``test_acc``, ``assignments``, ``counts``) are preserved as properties so
+    existing plotting/benchmark code keeps working unchanged.
+    """
+
+    trace: Trace
+
+    @property
+    def rounds(self) -> list[int]:
+        return list(range(int(self.trace.loss.shape[0])))
+
+    @property
+    def train_loss(self) -> list[float]:
+        return [float(x) for x in np.asarray(self.trace.loss)]
+
+    @property
+    def test_acc(self) -> list[float]:
+        return [float(x) for x in np.asarray(self.trace.acc)]
+
+    @property
+    def assignments(self) -> list[list[int]]:
+        return np.asarray(self.trace.assignment).astype(int).tolist()
+
+    @property
+    def counts(self) -> list[list[int]]:
+        return np.asarray(self.trace.counts).astype(int).tolist()
 
 
-def _make_round_fn(loss_fn, cfg: FederationConfig, template: PyTree):
-    """Jitted: (global_params, coal_state, client_data, key) -> round result."""
+class Federation:
+    """A federation = one strategy + one engine over a client population.
 
-    def round_fn(global_params, coal_state, client_data, key):
-        ckeys = jax.random.split(key, cfg.n_clients)
+    Args:
+      loss_fn: (params, batch) -> scalar training loss for one client.
+      eval_fn: params -> scalar test accuracy (runs *inside* the scanned
+        program, so it must be jit-compatible).
+      cfg: federation configuration; ``cfg.method`` names a registered
+        strategy unless an explicit ``strategy`` instance is given.
+      strategy: optional pre-built :class:`Strategy` (overrides cfg.method).
+    """
+
+    def __init__(self, loss_fn: Callable[[PyTree, PyTree], jax.Array],
+                 eval_fn: Callable[[PyTree], jax.Array],
+                 cfg: FederationConfig,
+                 strategy: Strategy | None = None):
+        self.loss_fn = loss_fn
+        self.eval_fn = eval_fn
+        self.cfg = cfg
+        self.strategy = strategy if strategy is not None else \
+            strategies.make_strategy(cfg.method, n_clients=cfg.n_clients,
+                                     n_coalitions=cfg.n_coalitions,
+                                     backend=cfg.backend)
+
+    # -- shared round pieces -----------------------------------------------------
+
+    def _local_phase(self, global_params, client_data, key):
+        """Broadcast + vmapped ClientUpdate -> ((N, D) weights, mean loss)."""
+        ckeys = jax.random.split(key, self.cfg.n_clients)
         new_params, losses = jax.vmap(
-            lambda d, k: client_update(loss_fn, global_params, d, k, cfg.client)
+            lambda d, k: client_update(self.loss_fn, global_params, d, k,
+                                       self.cfg.client)
         )(client_data, ckeys)
-        w = pytree.client_matrix(new_params)               # (N, D)
-        if cfg.method == "fedavg":
-            theta = aggregation.fedavg(w)
-            assignment = jnp.zeros((cfg.n_clients,), jnp.int32)
-            counts = jnp.array([cfg.n_clients] + [0] * (cfg.n_coalitions - 1),
-                               jnp.float32)
-            new_state = coal_state
-        else:
-            r = aggregation.coalition_round(w, coal_state, backend=cfg.backend)
-            theta, assignment, counts, new_state = (
-                r.theta, r.assignment, r.counts, r.state)
-        new_global = pytree.unflatten(theta, template)
-        return new_global, new_state, jnp.mean(losses), assignment, counts, w
+        return pytree.client_matrix(new_params), jnp.mean(losses)
 
-    return jax.jit(round_fn)
+    def _round0(self, init_params, client_data, key):
+        """Round 0: ω^0 <- ClientUpdate(θ^(0)); strategy state init from ω^0."""
+        key, k0, kc = jax.random.split(key, 3)
+        w0, loss0 = self._local_phase(init_params, client_data, k0)
+        state = self.strategy.init_state(kc, w0)
+        res = self.strategy.round(w0, state)
+        gp = pytree.unflatten(res.theta, init_params)
+        return key, gp, res.state, loss0, self.eval_fn(gp), res.metrics
 
+    # -- engines -------------------------------------------------------------------
+    # The jitted programs are memoized per Federation instance, so repeated
+    # .run() calls (benchmark reps, sweeps over seeds) compile exactly once.
 
-def _make_init_round_fn(loss_fn, cfg: FederationConfig):
-    """Round 0: clients train from θ^(0); centers initialised from ω^0."""
+    @functools.cached_property
+    def _scan_engine(self):
+        """(θ0, client_data, key) -> (θ_final, Trace): one lax.scan program."""
 
-    def f(global_params, client_data, key):
-        ckeys = jax.random.split(key, cfg.n_clients)
-        new_params, losses = jax.vmap(
-            lambda d, k: client_update(loss_fn, global_params, d, k, cfg.client)
-        )(client_data, ckeys)
-        w = pytree.client_matrix(new_params)
-        return w, jnp.mean(losses)
+        def step_with(data):
+            def step(carry, _):
+                key, params, state = carry
+                key, kr = jax.random.split(key)
+                w, loss = self._local_phase(params, data, kr)
+                res = self.strategy.round(w, state)
+                gp = pytree.unflatten(res.theta, params)
+                acc = self.eval_fn(gp)
+                return (key, gp, res.state), (loss, acc, res.metrics)
 
-    return jax.jit(f)
+            return step
+
+        def engine(params, client_data, key):
+            key, gp, state, loss0, acc0, m0 = self._round0(
+                params, client_data, key)
+            (_, gp, _), (loss, acc, m) = jax.lax.scan(
+                step_with(client_data), (key, gp, state), None,
+                length=self.cfg.rounds - 1)
+            trace = Trace(
+                loss=jnp.concatenate([loss0[None], loss]),
+                acc=jnp.concatenate([acc0[None], acc]),
+                assignment=jnp.concatenate([m0.assignment[None], m.assignment]),
+                counts=jnp.concatenate([m0.counts[None], m.counts]))
+            return gp, trace
+
+        return jax.jit(engine)
+
+    def _run_scan(self, init_params, client_data, key):
+        """All R rounds (eval included) as ONE jitted lax.scan program."""
+        gp, trace = self._scan_engine(init_params, client_data, key)
+        return gp, History(trace=jax.device_get(trace))
+
+    @functools.cached_property
+    def _round_jit(self):
+        def round_fn(params, state, client_data, kr):
+            w, loss = self._local_phase(params, client_data, kr)
+            res = self.strategy.round(w, state)
+            return (pytree.unflatten(res.theta, params), res.state, loss,
+                    res.metrics)
+
+        return jax.jit(round_fn)
+
+    @functools.cached_property
+    def _round0_jit(self):
+        return jax.jit(self._round0)
+
+    @functools.cached_property
+    def _eval_jit(self):
+        return jax.jit(self.eval_fn)
+
+    def _run_python(self, init_params, client_data, key):
+        """Legacy host loop: one jitted round program per step."""
+        key, gp, state, loss0, acc0, m0 = self._round0_jit(
+            init_params, client_data, key)
+        loss_l, acc_l = [loss0], [acc0]
+        asg_l, cnt_l = [m0.assignment], [m0.counts]
+        for _ in range(1, self.cfg.rounds):
+            key, kr = jax.random.split(key)
+            gp, state, loss, m = self._round_jit(gp, state, client_data, kr)
+            loss_l.append(loss)
+            acc_l.append(self._eval_jit(gp))
+            asg_l.append(m.assignment)
+            cnt_l.append(m.counts)
+        trace = Trace(loss=jnp.stack(loss_l), acc=jnp.stack(acc_l),
+                      assignment=jnp.stack(asg_l), counts=jnp.stack(cnt_l))
+        return gp, History(trace=jax.device_get(trace))
+
+    _ENGINES = {"scan": _run_scan, "python": _run_python}
+
+    def run(self, init_params: PyTree, client_data: PyTree, key: jax.Array,
+            *, engine: str | None = None) -> tuple[PyTree, History]:
+        """Run the full federation; returns (final θ pytree, History).
+
+        Args:
+          init_params: θ^(0).
+          client_data: pytree of arrays with leading dim (n_clients, n_local, ...).
+          key: PRNG key (same key + same strategy => same History on either
+            engine).
+          engine: override ``cfg.engine`` ('scan' | 'python').
+        """
+        name = engine if engine is not None else self.cfg.engine
+        try:
+            run_engine = self._ENGINES[name]
+        except KeyError:
+            raise KeyError(f"unknown engine {name!r}; available: "
+                           f"{tuple(sorted(self._ENGINES))}") from None
+        return run_engine(self, init_params, client_data, key)
 
 
 def run_federation(init_params: PyTree,
@@ -82,51 +240,13 @@ def run_federation(init_params: PyTree,
                    eval_fn: Callable[[PyTree], jax.Array],
                    client_data: PyTree,
                    key: jax.Array,
-                   cfg: FederationConfig) -> History:
-    """Run the full federation.
+                   cfg: FederationConfig,
+                   strategy: Strategy | None = None) -> History:
+    """Compatibility entry point: build a :class:`Federation` and run it.
 
-    Args:
-      init_params: θ^(0).
-      loss_fn: (params, batch) -> scalar training loss.
-      eval_fn: params -> scalar test accuracy (jitted by caller or here).
-      client_data: pytree of arrays with leading dim (n_clients, n_local, ...).
-      cfg: federation configuration.
+    ``cfg.method`` resolves through the strategy registry — any registered
+    aggregation rule runs through the same engine.
     """
-    eval_jit = jax.jit(eval_fn)
-    hist = History()
-    global_params = init_params
-    template = init_params
-
-    key, k0, kc = jax.random.split(key, 3)
-    init_fn = _make_init_round_fn(loss_fn, cfg)
-    round_fn = _make_round_fn(loss_fn, cfg, template)
-
-    # --- round 0: ω^0 <- ClientUpdate(θ^(0)); init coalition centers ---
-    w0, loss0 = init_fn(global_params, client_data, k0)
-    coal_state = coalitions.init_centers(kc, w0, cfg.n_coalitions)
-    if cfg.method == "coalition":
-        r0 = aggregation.coalition_round(w0, coal_state, backend=cfg.backend)
-        global_params = pytree.unflatten(r0.theta, template)
-        coal_state = r0.state
-        a0, c0 = r0.assignment, r0.counts
-    else:
-        global_params = pytree.unflatten(aggregation.fedavg(w0), template)
-        a0 = jnp.zeros((cfg.n_clients,), jnp.int32)
-        c0 = jnp.array([cfg.n_clients] + [0] * (cfg.n_coalitions - 1), jnp.float32)
-    hist.rounds.append(0)
-    hist.train_loss.append(float(loss0))
-    hist.test_acc.append(float(eval_jit(global_params)))
-    hist.assignments.append([int(x) for x in a0])
-    hist.counts.append([int(x) for x in c0])
-
-    # --- rounds 1..R ---
-    for r in range(1, cfg.rounds):
-        key, kr = jax.random.split(key)
-        global_params, coal_state, loss, assignment, counts, _ = round_fn(
-            global_params, coal_state, client_data, kr)
-        hist.rounds.append(r)
-        hist.train_loss.append(float(loss))
-        hist.test_acc.append(float(eval_jit(global_params)))
-        hist.assignments.append([int(x) for x in assignment])
-        hist.counts.append([int(x) for x in counts])
+    _, hist = Federation(loss_fn, eval_fn, cfg, strategy=strategy).run(
+        init_params, client_data, key)
     return hist

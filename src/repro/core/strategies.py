@@ -1,0 +1,263 @@
+"""Pluggable aggregation strategies — the federation engine's extension point.
+
+Every aggregation rule (the paper's Algorithm 1, its FedAvg baseline, and any
+future scenario) is a :class:`Strategy` with one uniform contract:
+
+  ``init_state(key, w0) -> state``      — build the rule's own state pytree
+                                          from the round-0 client weights
+  ``round(w, state) -> RoundResult``    — consume fresh (N, D) client weights,
+                                          emit θ, the next state, and metrics
+
+State is opaque to the engine: the coalition rule carries its
+:class:`~repro.core.coalitions.CoalitionState` center indices, FedAvg carries
+a bare round counter, and the engine just threads whatever pytree comes back
+through ``jax.lax.scan`` — no rule-specific fields leak into ``server.py``.
+
+Strategies are constructed through a registry::
+
+    @register_strategy("my_rule")
+    def _make(*, n_clients, n_coalitions, backend, **extra) -> Strategy: ...
+
+    strat = make_strategy("my_rule", n_clients=10, n_coalitions=3)
+
+Built-ins:
+
+  ``fedavg``            — uniform client mean (the paper's baseline)
+  ``fedavg_weighted``   — shard-size-weighted FedAvg (n_k/n weighting)
+  ``fedavg_trimmed``    — coordinate-wise trimmed mean (robust to outlier
+                          clients; Zahri et al. arXiv:2312.15375 benchmark
+                          this family side-by-side with FedAvg)
+  ``coalition``         — the paper's Algorithm 1 (mean of coalition
+                          barycenters)
+  ``coalition_topk``    — trimmed Algorithm 1: θ averages only the ``top_m``
+                          largest coalitions, dropping splinter groups
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation
+from repro.core import backends as bk
+from repro.core import coalitions as co
+
+PyTree = Any
+
+
+class RoundMetrics(NamedTuple):
+    """Per-round observables every strategy reports (uniform across rules so
+    the scanned engine can stack them into a :class:`~repro.core.server.History`)."""
+
+    assignment: jax.Array   # (N,) int32 group id per client (0 if ungrouped)
+    counts: jax.Array       # (n_groups,) float32 group sizes / masses
+
+
+class RoundResult(NamedTuple):
+    """What one strategy round produces."""
+
+    theta: jax.Array        # (D,) float32 — the new global model
+    state: PyTree           # strategy state for the next round
+    metrics: RoundMetrics
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy(abc.ABC):
+    """Base class for aggregation strategies.
+
+    ``n_groups`` is the static length of ``metrics.counts`` (= ``n_coalitions``
+    for coalition rules; flat rules report everything in group 0 so histories
+    stay shape-compatible across strategies).
+    """
+
+    n_clients: int
+    n_groups: int = 1
+
+    @abc.abstractmethod
+    def init_state(self, key: jax.Array, w0: jax.Array) -> PyTree:
+        """State pytree from the round-0 client weight matrix ``w0``."""
+
+    @abc.abstractmethod
+    def round(self, w: jax.Array, state: PyTree) -> RoundResult:
+        """One aggregation round over fresh client weights ``w``."""
+
+    def _flat_metrics(self) -> RoundMetrics:
+        """Everyone-in-group-0 metrics for non-partitioning rules."""
+        counts = jnp.zeros((self.n_groups,), jnp.float32)
+        counts = counts.at[0].set(float(self.n_clients))
+        return RoundMetrics(
+            assignment=jnp.zeros((self.n_clients,), jnp.int32), counts=counts)
+
+
+# --- registry --------------------------------------------------------------------
+
+_STRATEGIES: dict[str, Callable[..., Strategy]] = {}
+
+
+def register_strategy(name: str) -> Callable:
+    """Decorator: register a strategy factory under ``name``.
+
+    The factory receives keyword config (``n_clients``, ``n_coalitions``,
+    ``backend``, plus rule-specific extras) and returns a :class:`Strategy`.
+    Factories must tolerate unknown keywords (``**_``) so shared config can
+    grow without breaking every rule.
+    """
+
+    def deco(factory: Callable[..., Strategy]) -> Callable[..., Strategy]:
+        _STRATEGIES[name] = factory
+        return factory
+
+    return deco
+
+
+def make_strategy(name: str, *, n_clients: int, n_coalitions: int = 1,
+                  backend: str | bk.Backend = "xla", **extra) -> Strategy:
+    """Build a registered strategy from shared + rule-specific config."""
+    try:
+        factory = _STRATEGIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown strategy {name!r}; available: {available_strategies()}"
+        ) from None
+    return factory(n_clients=n_clients, n_coalitions=n_coalitions,
+                   backend=backend, **extra)
+
+
+def available_strategies() -> tuple[str, ...]:
+    return tuple(sorted(_STRATEGIES))
+
+
+# --- flat (non-partitioning) rules ----------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgStrategy(Strategy):
+    """FedAvg: (optionally weighted) mean of client weights.
+
+    ``client_weights=None`` is the paper's baseline (equal shards ⇒ uniform
+    mean); pass shard sizes for the classical n_k/n weighting.
+    """
+
+    client_weights: jax.Array | None = None
+
+    def init_state(self, key, w0):
+        return jnp.int32(0)                     # just a round counter
+
+    def round(self, w, state):
+        theta = aggregation.fedavg(w, self.client_weights)
+        return RoundResult(theta=theta, state=state + 1,
+                           metrics=self._flat_metrics())
+
+
+@dataclasses.dataclass(frozen=True)
+class TrimmedFedAvgStrategy(Strategy):
+    """Coordinate-wise trimmed mean: drop the ``trim`` largest and smallest
+    client values per parameter before averaging (robust-aggregation family)."""
+
+    trim: int = 1
+
+    def __post_init__(self):
+        if not 0 <= 2 * self.trim < self.n_clients:
+            raise ValueError(
+                f"trim={self.trim} must satisfy 0 <= 2*trim < "
+                f"n_clients={self.n_clients}")
+
+    def init_state(self, key, w0):
+        return jnp.int32(0)
+
+    def round(self, w, state):
+        theta = aggregation.trimmed_mean(w, self.trim)
+        return RoundResult(theta=theta, state=state + 1,
+                           metrics=self._flat_metrics())
+
+
+# --- coalition rules (Algorithm 1 family) ---------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CoalitionStrategy(Strategy):
+    """The paper's Algorithm 1: weight-distance coalitions, θ = mean of
+    coalition barycenters.  State is the center-index recurrence v_j^r."""
+
+    backend: bk.Backend = dataclasses.field(
+        default_factory=lambda: bk.get_backend("xla"))
+    client_weights: jax.Array | None = None
+
+    def init_state(self, key, w0):
+        return co.init_centers(key, w0, self.n_groups)
+
+    def _coalition_round(self, w, state) -> co.CoalitionRound:
+        return co.run_round(w, state, backend=self.backend,
+                            client_weights=self.client_weights)
+
+    def round(self, w, state):
+        r = self._coalition_round(w, state)
+        return RoundResult(theta=r.theta, state=r.state,
+                           metrics=RoundMetrics(assignment=r.assignment,
+                                                counts=r.counts))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCoalitionStrategy(CoalitionStrategy):
+    """Trimmed Algorithm 1: θ averages only the ``top_m`` most-populated
+    coalitions, so splinter groups (stragglers, poisoned clients) stop pulling
+    the global model."""
+
+    top_m: int = 1
+
+    def __post_init__(self):
+        if not 1 <= self.top_m <= self.n_groups:
+            raise ValueError(
+                f"top_m={self.top_m} must be in [1, n_coalitions="
+                f"{self.n_groups}]")
+
+    def round(self, w, state):
+        r = self._coalition_round(w, state)
+        _, top_idx = jax.lax.top_k(r.counts, self.top_m)
+        theta = jnp.mean(r.barycenters[top_idx], axis=0)
+        return RoundResult(theta=theta, state=r.state,
+                           metrics=RoundMetrics(assignment=r.assignment,
+                                                counts=r.counts))
+
+
+# --- built-in factories ----------------------------------------------------------
+
+@register_strategy("fedavg")
+def _make_fedavg(*, n_clients, n_coalitions=1, backend="xla",
+                 **_) -> Strategy:
+    return FedAvgStrategy(n_clients=n_clients, n_groups=n_coalitions)
+
+
+@register_strategy("fedavg_weighted")
+def _make_fedavg_weighted(*, n_clients, n_coalitions=1, backend="xla",
+                          client_weights=None, **_) -> Strategy:
+    if client_weights is None:
+        client_weights = jnp.ones((n_clients,), jnp.float32)
+    return FedAvgStrategy(n_clients=n_clients, n_groups=n_coalitions,
+                          client_weights=jnp.asarray(client_weights))
+
+
+@register_strategy("fedavg_trimmed")
+def _make_fedavg_trimmed(*, n_clients, n_coalitions=1, backend="xla",
+                         trim=1, **_) -> Strategy:
+    return TrimmedFedAvgStrategy(n_clients=n_clients, n_groups=n_coalitions,
+                                 trim=trim)
+
+
+@register_strategy("coalition")
+def _make_coalition(*, n_clients, n_coalitions=3, backend="xla",
+                    client_weights=None, **_) -> Strategy:
+    return CoalitionStrategy(n_clients=n_clients, n_groups=n_coalitions,
+                             backend=bk.get_backend(backend),
+                             client_weights=client_weights)
+
+
+@register_strategy("coalition_topk")
+def _make_coalition_topk(*, n_clients, n_coalitions=3, backend="xla",
+                         client_weights=None, top_m=None, **_) -> Strategy:
+    if top_m is None:
+        top_m = max(1, n_coalitions - 1)
+    return TopKCoalitionStrategy(n_clients=n_clients, n_groups=n_coalitions,
+                                 backend=bk.get_backend(backend),
+                                 client_weights=client_weights, top_m=top_m)

@@ -83,6 +83,8 @@ def roofline(compiled, *, chips: int, model_flops_global: float,
              hlo_text: str | None = None) -> dict[str, Any]:
     """All three roofline terms (seconds) + bottleneck + usefulness ratio."""
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):       # older jax: one dict per device
+        ca = ca[0] if ca else {}
     flops_dev = float(ca.get("flops", 0.0))
     bytes_dev = float(ca.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()

@@ -105,6 +105,8 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
               f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
         print("  memory_analysis:", rec["memory_analysis"])
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+            ca = ca[0] if ca else {}
         print(f"  cost_analysis: flops/dev={ca.get('flops', 0):.3e} "
               f"bytes/dev={ca.get('bytes accessed', 0):.3e}")
     return rec

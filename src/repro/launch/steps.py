@@ -15,7 +15,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation, coalitions, pytree
+from repro.core import pytree, strategies
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
 from repro.optim import optimizers as opt_mod
@@ -61,12 +61,14 @@ def make_fl_round_step(loss_fn: Callable, template: PyTree, *, n_coalitions: int
                        lr: float = 0.01, local_steps: int = 1,
                        backend: str = "xla", wdtype=jnp.float32,
                        wspec=None, shardmap_mesh=None,
-                       client_axis="data") -> Callable:
+                       client_axis="data", strategy=None) -> Callable:
     """One federated round as a single SPMD program.
 
     Args:
       loss_fn: (params, batch) -> scalar for the client model.
       template: single-client param pytree (structure/template).
+      strategy: optional :class:`repro.core.strategies.Strategy`; defaults to
+        the paper's ``coalition`` rule built from ``n_coalitions``/``backend``.
       backend: distance computation form — 'xla' (streaming diff) or 'dot'
         (Gram form; under a (clients, D-shard) layout the distance collective
         shrinks from an all-gather of W to an all-reduce of (N, N)).
@@ -99,27 +101,32 @@ def make_fl_round_step(loss_fn: Callable, template: PyTree, *, n_coalitions: int
     if shardmap_mesh is not None:
         from jax.sharding import PartitionSpec as P
 
+        from repro.compat import shard_map
+
         def spec0(tree):
             return jax.tree.map(
                 lambda l: P(client_axis, *([None] * (l.ndim - 1))), tree)
 
         def local_phase(client_params, client_batch):  # noqa: F811
             in_specs = (spec0(client_params), spec0(client_batch))
-            return jax.shard_map(
+            return shard_map(
                 lambda cp, cb: jax.vmap(one_client)(cp, cb),
                 mesh=shardmap_mesh, in_specs=in_specs,
                 out_specs=spec0(client_params))(client_params, client_batch)
 
-    def fl_round(client_params, client_batch, state: coalitions.CoalitionState):
+    def fl_round(client_params, client_batch, state):
         new_params = local_phase(client_params, client_batch)
         w = pytree.client_matrix(new_params, dtype=wdtype)    # (N, D)
         if wspec is not None:
             w = jax.lax.with_sharding_constraint(w, wspec)
-        r = aggregation.coalition_round(w, state, backend=backend)
-        theta = pytree.unflatten(r.theta, template)
+        strat = strategy if strategy is not None else strategies.make_strategy(
+            "coalition", n_clients=w.shape[0], n_coalitions=n_coalitions,
+            backend=backend)
+        res = strat.round(w, state)
+        theta = pytree.unflatten(res.theta, template)
         n = jax.tree.leaves(client_params)[0].shape[0]
         broadcast = jax.tree.map(
             lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), theta)
-        return broadcast, r.state, r.assignment, r.counts
+        return broadcast, res.state, res.metrics.assignment, res.metrics.counts
 
     return fl_round

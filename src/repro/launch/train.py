@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import strategies
+
 
 def run_fl(args) -> dict:
     from repro.core.client import ClientConfig
@@ -46,13 +48,14 @@ def run_fl(args) -> dict:
         rounds=args.rounds, method=args.method,
         client=ClientConfig(epochs=args.local_epochs,
                             batch_size=args.batch_size, lr=args.lr),
-        backend=args.backend)
+        backend=args.backend, engine=args.engine)
     params = cnn.init(jax.random.key(args.seed))
     t0 = time.time()
     hist = run_federation(params, cnn.loss_fn,
                           lambda p: cnn.accuracy(p, xte_j, yte_j),
                           cd, jax.random.key(args.seed + 1), cfg)
-    out = {"mode": "fl", "method": args.method, "regime": args.regime,
+    out = {"mode": "fl", "method": args.method, "engine": args.engine,
+           "regime": args.regime,
            "source": source, "rounds": hist.rounds,
            "test_acc": hist.test_acc, "train_loss": hist.train_loss,
            "final_assignment": hist.assignments[-1],
@@ -110,7 +113,7 @@ def main() -> None:
     ap.add_argument("--mode", default="fl", choices=["fl", "pretrain"])
     # fl
     ap.add_argument("--method", default="coalition",
-                    choices=["coalition", "fedavg"])
+                    choices=sorted(strategies.available_strategies()))
     ap.add_argument("--regime", default="iid",
                     choices=["iid", "dirichlet", "shard"])
     ap.add_argument("--clients", type=int, default=10)
@@ -119,7 +122,10 @@ def main() -> None:
     ap.add_argument("--local-epochs", type=int, default=5)
     ap.add_argument("--n-train", type=int, default=20000)
     ap.add_argument("--n-test", type=int, default=4000)
-    ap.add_argument("--backend", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "dot", "pallas"])
+    ap.add_argument("--engine", default="scan", choices=["scan", "python"],
+                    help="fully-jitted lax.scan round loop vs legacy host loop")
     # pretrain
     ap.add_argument("--arch", default="hymba-1.5b")
     ap.add_argument("--reduced", action="store_true")

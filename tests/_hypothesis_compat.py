@@ -1,0 +1,32 @@
+"""Optional-hypothesis shim.
+
+The property tests use ``hypothesis``, which may not be installed in minimal
+environments.  Importing ``given``/``settings``/``st`` from here keeps the
+module collectable either way: with hypothesis installed the real decorators
+are re-exported; without it, ``@given(...)`` marks just the property tests as
+skipped while every plain test in the module still runs.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``; every call returns None."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed")(fn)
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn

@@ -4,6 +4,14 @@ import jax
 import pytest
 
 
+def pytest_configure(config):
+    # Belt-and-braces with pytest.ini: the marker stays registered even when
+    # pytest runs from a cwd where pytest.ini is not picked up.
+    config.addinivalue_line(
+        "markers",
+        'slow: long-running end-to-end tests (deselect with -m "not slow")')
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.key(0)

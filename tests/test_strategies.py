@@ -1,0 +1,259 @@
+"""Strategy registry + scanned federation engine tests.
+
+Covers the api_redesign acceptance criteria: registry round-trip, strategies
+bit-identical to the pre-refactor aggregation functions, scanned-vs-python
+History equivalence, backend registry resolution, and comm-model validation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, backends, coalitions, strategies
+from repro.core.client import ClientConfig
+from repro.core.server import Federation, FederationConfig, History, Trace, \
+    run_federation
+from repro.core.strategies import RoundMetrics, RoundResult, Strategy
+
+
+def _rand_w(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+
+
+# --- registry round-trips ---------------------------------------------------------
+
+class TestStrategyRegistry:
+    def test_builtins_registered(self):
+        avail = strategies.available_strategies()
+        for name in ("fedavg", "fedavg_weighted", "fedavg_trimmed",
+                     "coalition", "coalition_topk"):
+            assert name in avail
+
+    def test_register_lookup_roundtrip(self):
+        @strategies.register_strategy("_test_rule")
+        def _make(*, n_clients, n_coalitions=1, backend="xla", **_):
+            return strategies.FedAvgStrategy(n_clients=n_clients,
+                                             n_groups=n_coalitions)
+
+        try:
+            s = strategies.make_strategy("_test_rule", n_clients=4)
+            assert isinstance(s, Strategy) and s.n_clients == 4
+            assert "_test_rule" in strategies.available_strategies()
+        finally:
+            del strategies._STRATEGIES["_test_rule"]
+
+    def test_unknown_name_error(self):
+        with pytest.raises(KeyError, match="unknown strategy 'nope'"):
+            strategies.make_strategy("nope", n_clients=4)
+
+    def test_unknown_backend_error(self):
+        with pytest.raises(KeyError, match="unknown backend"):
+            backends.get_backend("nope")
+
+    def test_backend_passthrough(self):
+        b = backends.get_backend("xla")
+        assert backends.get_backend(b) is b
+
+
+# --- strategies == pre-refactor functions (bit-identical) ------------------------
+
+class TestStrategyEquivalence:
+    def test_fedavg_bit_identical(self):
+        w = _rand_w(10, 257, seed=1)
+        s = strategies.make_strategy("fedavg", n_clients=10, n_coalitions=3)
+        res = s.round(w, s.init_state(jax.random.key(0), w))
+        np.testing.assert_array_equal(np.asarray(res.theta),
+                                      np.asarray(aggregation.fedavg(w)))
+        np.testing.assert_array_equal(np.asarray(res.metrics.counts),
+                                      [10.0, 0.0, 0.0])
+
+    def test_fedavg_weighted_bit_identical(self):
+        w = _rand_w(6, 100, seed=2)
+        sizes = jnp.array([10.0, 20, 30, 40, 50, 60])
+        s = strategies.make_strategy("fedavg_weighted", n_clients=6,
+                                     client_weights=sizes)
+        res = s.round(w, s.init_state(jax.random.key(0), w))
+        np.testing.assert_array_equal(
+            np.asarray(res.theta), np.asarray(aggregation.fedavg(w, sizes)))
+
+    def test_coalition_bit_identical(self):
+        w = _rand_w(10, 300, seed=3)
+        s = strategies.make_strategy("coalition", n_clients=10, n_coalitions=3)
+        state = s.init_state(jax.random.key(7), w)
+        ref_state = coalitions.init_centers(jax.random.key(7), w, 3)
+        np.testing.assert_array_equal(np.asarray(state.center_idx),
+                                      np.asarray(ref_state.center_idx))
+        res = s.round(w, state)
+        ref = coalitions.run_round(w, ref_state)
+        np.testing.assert_array_equal(np.asarray(res.theta),
+                                      np.asarray(ref.theta))
+        np.testing.assert_array_equal(np.asarray(res.metrics.assignment),
+                                      np.asarray(ref.assignment))
+        np.testing.assert_array_equal(np.asarray(res.state.center_idx),
+                                      np.asarray(ref.state.center_idx))
+
+    def test_topk_full_equals_coalition(self):
+        """top_m = K keeps every barycenter -> exactly Algorithm 1's θ."""
+        w = _rand_w(10, 64, seed=4)
+        state = coalitions.init_centers(jax.random.key(1), w, 3)
+        full = strategies.make_strategy("coalition_topk", n_clients=10,
+                                        n_coalitions=3, top_m=3)
+        ref = coalitions.run_round(w, state)
+        res = full.round(w, state)
+        np.testing.assert_allclose(np.asarray(res.theta),
+                                   np.asarray(ref.theta), rtol=1e-6)
+
+    def test_topk_one_is_largest_barycenter(self):
+        w = _rand_w(10, 64, seed=5)
+        state = coalitions.init_centers(jax.random.key(2), w, 3)
+        ref = coalitions.run_round(w, state)
+        res = strategies.make_strategy("coalition_topk", n_clients=10,
+                                       n_coalitions=3, top_m=1).round(w, state)
+        top = int(np.argmax(np.asarray(ref.counts)))
+        np.testing.assert_allclose(np.asarray(res.theta),
+                                   np.asarray(ref.barycenters)[top], rtol=1e-6)
+
+    def test_trimmed_mean(self):
+        w = _rand_w(7, 33, seed=6)
+        got = aggregation.trimmed_mean(w, 2)
+        ws = np.sort(np.asarray(w), axis=0)
+        np.testing.assert_allclose(got, ws[2:-2].mean(0), rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(aggregation.trimmed_mean(w, 0)),
+                                      np.asarray(aggregation.fedavg(w)))
+        with pytest.raises(ValueError, match="trim"):
+            aggregation.trimmed_mean(w, 4)
+
+    def test_strategy_validation(self):
+        with pytest.raises(ValueError, match="top_m"):
+            strategies.make_strategy("coalition_topk", n_clients=10,
+                                     n_coalitions=3, top_m=4)
+        with pytest.raises(ValueError, match="trim"):
+            strategies.make_strategy("fedavg_trimmed", n_clients=4, trim=2)
+
+
+# --- scanned engine == python loop ----------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_fl():
+    from repro.data import loader, partition, synthetic
+    from repro.models import cnn
+
+    xtr, ytr = synthetic.digits(500, seed=0)
+    xte, yte = synthetic.digits(150, seed=1)
+    xte, yte = jnp.asarray(xte), jnp.asarray(yte)
+    idx = partition.partition("iid", ytr, 5, seed=0)
+    cd = jax.tree.map(jnp.asarray, loader.client_datasets(xtr, ytr, idx))
+    return cnn, cd, xte, yte
+
+
+@pytest.mark.parametrize("method", ["coalition", "fedavg"])
+def test_scan_matches_python_loop(tiny_fl, method):
+    cnn, cd, xte, yte = tiny_fl
+    cfg = FederationConfig(
+        n_clients=5, n_coalitions=2, rounds=3, method=method,
+        client=ClientConfig(epochs=1, batch_size=10, lr=0.05))
+    fed = Federation(cnn.loss_fn, lambda p: cnn.accuracy(p, xte, yte), cfg)
+    params = cnn.init(jax.random.key(0))
+    _, h_scan = fed.run(params, cd, jax.random.key(1), engine="scan")
+    _, h_py = fed.run(params, cd, jax.random.key(1), engine="python")
+    np.testing.assert_allclose(h_scan.trace.loss, h_py.trace.loss,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(h_scan.trace.acc, h_py.trace.acc,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(h_scan.trace.assignment,
+                                  h_py.trace.assignment)
+    np.testing.assert_array_equal(h_scan.trace.counts, h_py.trace.counts)
+
+
+def test_run_federation_all_strategies(tiny_fl):
+    """Every registered strategy drives the same engine via cfg.method."""
+    cnn, cd, xte, yte = tiny_fl
+    for method in strategies.available_strategies():
+        cfg = FederationConfig(
+            n_clients=5, n_coalitions=2, rounds=2, method=method,
+            client=ClientConfig(epochs=1, batch_size=10, lr=0.05))
+        hist = run_federation(cnn.init(jax.random.key(0)), cnn.loss_fn,
+                              lambda p: cnn.accuracy(p, xte, yte),
+                              cd, jax.random.key(1), cfg)
+        assert len(hist.test_acc) == 2 and np.isfinite(hist.test_acc).all()
+        assert hist.rounds == [0, 1]
+        assert np.asarray(hist.counts).sum(axis=1).tolist() == [5, 5]
+
+
+def test_history_compat_view():
+    trace = Trace(loss=jnp.array([1.0, 0.5]), acc=jnp.array([0.1, 0.6]),
+                  assignment=jnp.array([[0, 1, 1], [1, 0, 1]], jnp.int32),
+                  counts=jnp.array([[1.0, 2.0], [1.0, 2.0]]))
+    h = History(trace=trace)
+    assert h.rounds == [0, 1]
+    assert h.train_loss == [1.0, 0.5]
+    assert h.test_acc == pytest.approx([0.1, 0.6])
+    assert h.assignments == [[0, 1, 1], [1, 0, 1]]
+    assert h.counts == [[1, 2], [1, 2]]
+    assert all(isinstance(v, int) for row in h.assignments for v in row)
+
+
+def test_unknown_engine_error(tiny_fl):
+    cnn, cd, xte, yte = tiny_fl
+    cfg = FederationConfig(n_clients=5, n_coalitions=2, rounds=2,
+                           engine="warp")
+    fed = Federation(cnn.loss_fn, lambda p: 0.0, cfg)
+    with pytest.raises(KeyError, match="unknown engine"):
+        fed.run(cnn.init(jax.random.key(0)), cd, jax.random.key(1))
+
+
+# --- backend registry through the round ------------------------------------------
+
+def test_backends_agree_on_round():
+    w = _rand_w(8, 129, seed=9)
+    state = coalitions.init_centers(jax.random.key(0), w, 3)
+    r_xla = coalitions.run_round(w, state, backend="xla")
+    r_dot = coalitions.run_round(w, state, backend="dot")
+    np.testing.assert_array_equal(np.asarray(r_xla.assignment),
+                                  np.asarray(r_dot.assignment))
+    np.testing.assert_allclose(np.asarray(r_xla.theta),
+                               np.asarray(r_dot.theta), rtol=1e-4, atol=1e-5)
+
+
+def test_custom_backend_registration():
+    xla = backends.get_backend("xla")
+    custom = backends.Backend(name="_test_backend",
+                              pairwise_sq_dists=xla.pairwise_sq_dists,
+                              sq_dists_to_points=xla.sq_dists_to_points,
+                              segment_sum=xla.segment_sum)
+    backends.register_backend(custom)
+    try:
+        assert backends.get_backend("_test_backend") is custom
+        w = _rand_w(6, 50)
+        state = coalitions.init_centers(jax.random.key(0), w, 2)
+        r = coalitions.run_round(w, state, backend="_test_backend")
+        ref = coalitions.run_round(w, state, backend="xla")
+        np.testing.assert_array_equal(np.asarray(r.theta),
+                                      np.asarray(ref.theta))
+    finally:
+        del backends._BACKENDS["_test_backend"]
+
+
+# --- comm-model validation (satellite bugfix) ------------------------------------
+
+class TestCommValidation:
+    def test_k_greater_than_n_rejected(self):
+        with pytest.raises(ValueError, match="k=11"):
+            aggregation.comm_coalition(10, 11, 1000)
+        with pytest.raises(ValueError, match="k=0"):
+            aggregation.wan_savings(10, 0)
+
+    def test_bad_sizes_rejected(self):
+        with pytest.raises(ValueError, match="n_clients"):
+            aggregation.comm_fedavg(0, 1000)
+        with pytest.raises(ValueError, match="d="):
+            aggregation.comm_fedavg(10, 0)
+        with pytest.raises(ValueError, match="bytes_per_param"):
+            aggregation.comm_coalition(10, 3, 1000, bytes_per_param=0)
+
+    def test_valid_args_unchanged(self):
+        flat = aggregation.comm_fedavg(10, 1000)
+        hier = aggregation.comm_coalition(10, 3, 1000)
+        assert flat.wan_up == 10 * 4000 and hier.wan_up == 3 * 4000
+        assert aggregation.wan_savings(10, 3) == pytest.approx(10 / 3)
