@@ -15,13 +15,9 @@ from repro.core import aggregation
 from repro.models.cnn import CNNConfig
 
 
-def _cnn_params() -> int:
-    return 582_026          # conv1+conv2+fc1+fc2 (test-pinned)
-
-
 def table(n_clients: int = 10, k: int = 3, bytes_per_param: int = 4) -> list[dict]:
     rows = []
-    entries = [("paper-cnn", _cnn_params())]
+    entries = [("paper-cnn", CNNConfig().n_params())]
     entries += [(name, cfg.n_params()) for name, cfg in ARCHS.items()]
     for name, d in entries:
         flat = aggregation.comm_fedavg(n_clients, d, bytes_per_param)

@@ -91,6 +91,22 @@ def bench_federation_engines() -> tuple[float, float]:
     Returns (us per scanned run, speedup of scan over the python loop);
     execution time only, compile excluded for both engines.
     """
+    fed, params, cd = _tiny_federation(100, "coalition")
+    key = jax.random.key(1)
+
+    times = {}
+    for engine in ("scan", "python"):
+        fed.run(params, cd, key, engine=engine)          # compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            fed.run(params, cd, key, engine=engine)
+        times[engine] = (time.perf_counter() - t0) / 3 * 1e6
+    return times["scan"], times["python"] / times["scan"]
+
+
+def _tiny_federation(rounds: int, method: str, sim_cfg=None):
+    """A small least-squares federation (shared by the engine benchmarks)."""
+    from repro import sim
     from repro.core.client import ClientConfig
     from repro.core.server import Federation, FederationConfig
 
@@ -107,23 +123,44 @@ def bench_federation_engines() -> tuple[float, float]:
 
     xe = x.reshape(-1, dim)[:50]
     ye = (x @ w_true).reshape(-1)[:50]
-
     cfg = FederationConfig(
-        n_clients=n_clients, n_coalitions=3, rounds=100, method="coalition",
-        client=ClientConfig(epochs=1, batch_size=10, lr=0.01))
-    fed = Federation(loss_fn,
-                     lambda p: -jnp.mean((xe @ p["w"] - ye) ** 2), cfg)
-    params = {"w": jnp.zeros((dim,))}
-    key = jax.random.key(1)
+        n_clients=n_clients, n_coalitions=3, rounds=rounds, method=method,
+        client=ClientConfig(epochs=1, batch_size=10, lr=0.01),
+        sim=sim_cfg if sim_cfg is not None else sim.SimConfig())
+    fed = Federation(loss_fn, lambda p: -jnp.mean((xe @ p["w"] - ye) ** 2),
+                     cfg)
+    return fed, {"w": jnp.zeros((dim,))}, cd
 
-    times = {}
-    for engine in ("scan", "python"):
-        fed.run(params, cd, key, engine=engine)          # compile
+
+def bench_coalition_vs_fedavg_under_stragglers() -> tuple[float, float]:
+    """The IoT-substrate benchmark: both aggregation rules on the
+    ``semi_async`` engine over the same flaky cellular fleet.  Prints the
+    per-round simulated wall-clock and WAN bytes for each rule as ``#``
+    comment rows, and returns (us per coalition run, WAN-byte saving of the
+    hierarchical coalition schedule over flat FedAvg on the rounds that
+    actually ran).
+    """
+    from repro import sim
+
+    sim_cfg = sim.SimConfig(fleet="cellular-flaky", seed=0,
+                            staleness_alpha=0.5)
+    totals, us = {}, 0.0
+    for method in ("coalition", "fedavg"):
+        fed, params, cd = _tiny_federation(12, method, sim_cfg)
+        key = jax.random.key(1)
+        fed.run(params, cd, key, engine="semi_async")            # compile
         t0 = time.perf_counter()
-        for _ in range(3):
-            fed.run(params, cd, key, engine=engine)
-        times[engine] = (time.perf_counter() - t0) / 3 * 1e6
-    return times["scan"], times["python"] / times["scan"]
+        _, hist = fed.run(params, cd, key, engine="semi_async")
+        if method == "coalition":
+            us = (time.perf_counter() - t0) * 1e6
+        totals[method] = sum(hist.wan_bytes)
+        print(f"# stragglers[{method}] sim_time_s/round="
+              f"{[round(t, 2) for t in hist.sim_times]}")
+        print(f"# stragglers[{method}] wan_kB/round="
+              f"{[round(b / 1e3, 2) for b in hist.wan_bytes]}")
+        print(f"# stragglers[{method}] participants/round="
+              f"{[sum(r) for r in hist.participation]}")
+    return us, totals["fedavg"] / totals["coalition"]
 
 
 def bench_comm_cost() -> tuple[float, float]:
@@ -163,6 +200,8 @@ def main() -> None:
         ("kernel_segment_sum", bench_segment_sum),
         ("kernel_flash_attention", bench_flash_attention),
         ("federation_scan_vs_python", bench_federation_engines),
+        ("coalition_vs_fedavg_under_stragglers",
+         bench_coalition_vs_fedavg_under_stragglers),
         ("comm_cost_table", bench_comm_cost),
         ("decode_step_reduced", bench_decode_throughput),
     ]

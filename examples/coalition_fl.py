@@ -16,6 +16,7 @@ import sys
 import jax
 import jax.numpy as jnp
 
+from repro import sim
 from repro.core import strategies
 from repro.core.client import ClientConfig
 from repro.core.server import FederationConfig, run_federation
@@ -30,7 +31,13 @@ def main() -> None:
     ap.add_argument("--methods", default="fedavg,coalition",
                     help="comma-separated registered strategy names "
                          f"(available: {', '.join(strategies.available_strategies())})")
-    ap.add_argument("--engine", default="scan", choices=["scan", "python"])
+    ap.add_argument("--engine", default="scan",
+                    choices=["scan", "python", "semi_async"])
+    ap.add_argument("--fleet", default="ideal",
+                    help="fleet profile for --engine semi_async "
+                         f"(available: {', '.join(sim.available_fleets())})")
+    ap.add_argument("--participation", type=float, default=1.0)
+    ap.add_argument("--staleness", type=float, default=0.5)
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--local-epochs", type=int, default=2)
     ap.add_argument("--n-train", type=int, default=8000)
@@ -51,7 +58,11 @@ def main() -> None:
         cfg = FederationConfig(
             n_clients=10, n_coalitions=3, rounds=args.rounds, method=method,
             client=ClientConfig(epochs=args.local_epochs, batch_size=10,
-                                lr=0.05), engine=args.engine)
+                                lr=0.05), engine=args.engine,
+            sim=sim.SimConfig(fleet=args.fleet,
+                              participation=args.participation,
+                              staleness_alpha=args.staleness,
+                              seed=args.seed))
         hist = run_federation(cnn.init(jax.random.key(args.seed)),
                               cnn.loss_fn,
                               lambda p: cnn.accuracy(p, xte, yte),
@@ -62,6 +73,13 @@ def main() -> None:
         if method.startswith("coalition"):
             print(f"  final coalitions: assignment={hist.assignments[-1]} "
                   f"counts={hist.counts[-1]}")
+        if hist.sim_times is not None:    # semi_async substrate accounting
+            print(f"  fleet={args.fleet}: "
+                  f"sim_time={sum(hist.sim_times):.1f}s "
+                  f"wan={sum(hist.wan_bytes) / 1e6:.1f}MB "
+                  f"edge={sum(hist.edge_bytes) / 1e6:.1f}MB "
+                  f"mean participants="
+                  f"{sum(sum(r) for r in hist.participation) / len(hist.participation):.1f}/10")
 
     if "fedavg" in results and "coalition" in results:
         gap = (results["coalition"].test_acc[-1]

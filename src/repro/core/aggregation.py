@@ -37,6 +37,34 @@ def fedavg(w: jax.Array, weights: jax.Array | None = None) -> jax.Array:
     return wts @ w.astype(jnp.float32)
 
 
+def fedavg_masked(w: jax.Array, mask: jax.Array,
+                  weights: jax.Array | None = None) -> jax.Array:
+    """Participation-weighted FedAvg: ``Σ_i c_i m_i ω_i / Σ_i c_i m_i``.
+
+    ``mask`` is the (N,) per-client participation/staleness weight the
+    ``semi_async`` engine produces (1 = delivered this round, decayed for
+    late updates, 0 = excluded); ``weights`` are optional base client
+    weights (shard sizes).  Either way the denominator is clamped so an
+    all-zero mask degrades to θ = 0 instead of NaN.
+
+    The uniform path is deliberately expressed as ``jnp.mean`` of
+    mask-rescaled rows — NOT normalize-then-dot or sum-then-divide — so an
+    all-ones mask is bit-identical to :func:`fedavg`'s uniform mean: the
+    rescale factor ``N / Σm`` is then exactly 1.0, multiplying by exactly
+    1.0 is an identity, and the surviving op is the *same* ``mean`` (same
+    reduction, same divide-by-constant codegen).  The weighted path
+    mirrors :func:`fedavg`'s normalize-then-dot for the same reason (the
+    clamp returns the untouched Σ bits whenever the mass is positive).
+    """
+    m = mask.astype(jnp.float32)
+    if weights is None:
+        scale = m.shape[0] / jnp.maximum(jnp.sum(m), jnp.float32(1e-12))
+        return jnp.mean(w.astype(jnp.float32) * (m * scale)[:, None], axis=0)
+    eff = weights.astype(jnp.float32) * m
+    eff = eff / jnp.maximum(jnp.sum(eff), jnp.float32(1e-12))
+    return eff @ w.astype(jnp.float32)
+
+
 def trimmed_mean(w: jax.Array, trim: int) -> jax.Array:
     """Coordinate-wise trimmed mean over the (N, D) client weight matrix.
 

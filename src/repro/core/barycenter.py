@@ -45,7 +45,12 @@ def barycenters(w: jax.Array, assignment: jax.Array, k: int, *,
         onehot = onehot * client_weights.astype(jnp.float32)[None, :]
     counts = jnp.sum(onehot, axis=1)                  # (K,)
     sums = bk.get_backend(backend).segment_sum(onehot, w)   # (K, D)
-    denom = jnp.maximum(counts, 1.0)[:, None]
+    # Clamp only to dodge 0/0 (empty coalitions are replaced by ``fallback``
+    # below).  The clamp must stay far below any real mass: integer member
+    # counts are >= 1, but staleness-decayed participation weights (the
+    # semi_async engine) give coalitions fractional mass in (0, 1) whose
+    # barycenter would be silently shrunk by a 1.0 clamp.
+    denom = jnp.maximum(counts, 1e-12)[:, None]
     b = sums / denom
     if fallback is not None:
         empty = (counts == 0)[:, None]

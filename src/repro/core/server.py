@@ -7,22 +7,39 @@ drives an arbitrary registered strategy:
   broadcast θ -> vmapped ClientUpdate over all clients -> (N, D) weight
   matrix -> ``strategy.round(w, state)`` -> new θ + next state + metrics
 
-Two interchangeable engines execute that round program:
+Three interchangeable engines execute that round program:
 
-  ``'scan'``    (default) — the whole federation (all R rounds, eval
-                included) is ONE jitted ``jax.lax.scan`` program: zero
-                host round-trips, zero per-round dispatch overhead, and
-                the :class:`History` comes back as stacked device arrays.
-  ``'python'``  — the legacy host-side loop (one jitted round per step);
-                kept for debugging and as the benchmark baseline
-                (``benchmarks/run.py`` reports scan-vs-python wall clock).
+  ``'scan'``       (default) — the whole federation (all R rounds, eval
+                 included) is ONE jitted ``jax.lax.scan`` program: zero
+                 host round-trips, zero per-round dispatch overhead, and
+                 the :class:`History` comes back as stacked device arrays.
+  ``'python'``   — the legacy host-side loop (one jitted round per step);
+                 kept for debugging and as the benchmark baseline
+                 (``benchmarks/run.py`` reports scan-vs-python wall clock).
+  ``'semi_async'`` — the IoT-substrate engine (:mod:`repro.sim`): runs the
+                 same scanned round program over a simulated device fleet
+                 with partial participation and staleness-weighted merging
+                 of late updates.  Each round an availability process emits
+                 a participation mask; present clients deliver fresh
+                 updates, absent clients keep their last delivered update
+                 buffered with a growing staleness counter, and the
+                 strategy aggregates the buffer under per-client
+                 participation/staleness weights (the ``mask`` argument of
+                 ``Strategy.round``).  Live accounting — per-round
+                 simulated wall-clock and bytes-on-the-wire — lands in the
+                 :class:`Trace`.  On the ``ideal`` fleet profile (full
+                 participation, zero latency) the substrate reduces to
+                 exact no-ops and this engine reproduces ``scan``
+                 bit-for-bit (tested in ``tests/test_sim.py``).
 
-Both engines follow the identical PRNG-split discipline, so on a fixed seed
-they produce the same per-round θ and :class:`History` (tested in
-``tests/test_strategies.py``).  Per-round metrics (loss, accuracy, coalition
-structure) land in a :class:`History` whose list-based view (``.rounds``,
-``.test_acc``, ...) is preserved as compatibility properties for the
-benchmark harness (Figs. 2-4).
+All engines follow the identical PRNG-split discipline (``semi_async``
+draws availability from a *forked* stream via ``fold_in``, leaving the
+client-update chain untouched), so on a fixed seed they produce the same
+per-round θ and :class:`History` whenever the substrate is idle.  Per-round
+metrics (loss, accuracy, coalition structure, and — under ``semi_async`` —
+participation/sim-clock/bytes) land in a :class:`History` whose list-based
+view (``.rounds``, ``.test_acc``, ...) is preserved as compatibility
+properties for the benchmark harness (Figs. 2-4).
 """
 from __future__ import annotations
 
@@ -34,11 +51,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sim as sim_mod
+from repro.core import backends as bk
 from repro.core import pytree, strategies
 from repro.core.client import ClientConfig, client_update
 from repro.core.strategies import RoundMetrics, Strategy
 
 PyTree = Any
+
+BYTES_PER_PARAM = 4        # float32 models on the wire
 
 
 class FederationConfig(NamedTuple):
@@ -48,16 +69,25 @@ class FederationConfig(NamedTuple):
     method: str = "coalition"          # any registered strategy name
     client: ClientConfig = ClientConfig()
     backend: str = "xla"               # distance/barycenter backend name
-    engine: str = "scan"               # 'scan' (fully jitted) | 'python'
+    engine: str = "scan"               # 'scan' | 'python' | 'semi_async'
+    sim: sim_mod.SimConfig = sim_mod.SimConfig()   # IoT substrate knobs
 
 
 class Trace(NamedTuple):
-    """Stacked per-round device arrays for R rounds (the scan outputs)."""
+    """Stacked per-round device arrays for R rounds (the scan outputs).
 
-    loss: jax.Array        # (R,)   mean client training loss
+    The four core metrics are always present; the substrate metrics are
+    filled by the ``semi_async`` engine and None on the idealized engines.
+    """
+
+    loss: jax.Array        # (R,)   mean training loss of participating clients
     acc: jax.Array         # (R,)   test accuracy of θ^(r)
     assignment: jax.Array  # (R, N) per-client group id
-    counts: jax.Array      # (R, K) group sizes
+    counts: jax.Array      # (R, K) group sizes / masses
+    sim_time: jax.Array | None = None       # (R,) simulated seconds per round
+    wan_bytes: jax.Array | None = None      # (R,) bytes over the WAN link
+    edge_bytes: jax.Array | None = None     # (R,) bytes over edge links
+    participation: jax.Array | None = None  # (R, N) 0/1 participation mask
 
 
 @dataclasses.dataclass
@@ -68,7 +98,10 @@ class History:
     per metric — what a scanned loop naturally emits).  The list-based
     attributes of the old ``History`` (``rounds``, ``train_loss``,
     ``test_acc``, ``assignments``, ``counts``) are preserved as properties so
-    existing plotting/benchmark code keeps working unchanged.
+    existing plotting/benchmark code keeps working unchanged; the substrate
+    metrics get the same treatment (``sim_times``, ``wan_bytes``,
+    ``edge_bytes``, ``participation`` — None unless the ``semi_async``
+    engine produced them).
     """
 
     trace: Trace
@@ -93,6 +126,29 @@ class History:
     def counts(self) -> list[list[int]]:
         return np.asarray(self.trace.counts).astype(int).tolist()
 
+    @staticmethod
+    def _float_list(arr) -> list[float] | None:
+        return None if arr is None else [float(x) for x in np.asarray(arr)]
+
+    @property
+    def sim_times(self) -> list[float] | None:
+        """Per-round simulated wall-clock seconds (semi_async only)."""
+        return self._float_list(self.trace.sim_time)
+
+    @property
+    def wan_bytes(self) -> list[float] | None:
+        return self._float_list(self.trace.wan_bytes)
+
+    @property
+    def edge_bytes(self) -> list[float] | None:
+        return self._float_list(self.trace.edge_bytes)
+
+    @property
+    def participation(self) -> list[list[int]] | None:
+        if self.trace.participation is None:
+            return None
+        return np.asarray(self.trace.participation).astype(int).tolist()
+
 
 class Federation:
     """A federation = one strategy + one engine over a client population.
@@ -103,6 +159,9 @@ class Federation:
         program, so it must be jit-compatible).
       cfg: federation configuration; ``cfg.method`` names a registered
         strategy unless an explicit ``strategy`` instance is given.
+        ``cfg.engine``, ``cfg.backend``, and ``cfg.sim.fleet`` are validated
+        eagerly here — a typo fails at construction with the registered
+        options listed, not deep inside dispatch.
       strategy: optional pre-built :class:`Strategy` (overrides cfg.method).
     """
 
@@ -110,6 +169,20 @@ class Federation:
                  eval_fn: Callable[[PyTree], jax.Array],
                  cfg: FederationConfig,
                  strategy: Strategy | None = None):
+        if cfg.engine not in self._ENGINES:
+            raise ValueError(
+                f"unknown engine {cfg.engine!r}; registered engines: "
+                f"{tuple(sorted(self._ENGINES))}")
+        try:
+            bk.get_backend(cfg.backend)
+        except KeyError:
+            raise ValueError(
+                f"unknown backend {cfg.backend!r}; registered backends: "
+                f"{bk.available_backends()}") from None
+        if cfg.sim.fleet not in sim_mod.available_fleets():
+            raise ValueError(
+                f"unknown fleet profile {cfg.sim.fleet!r}; registered "
+                f"profiles: {sim_mod.available_fleets()}")
         self.loss_fn = loss_fn
         self.eval_fn = eval_fn
         self.cfg = cfg
@@ -121,22 +194,27 @@ class Federation:
     # -- shared round pieces -----------------------------------------------------
 
     def _local_phase(self, global_params, client_data, key):
-        """Broadcast + vmapped ClientUpdate -> ((N, D) weights, mean loss)."""
+        """Broadcast + vmapped ClientUpdate -> ((N, D) weights, (N,) losses)."""
         ckeys = jax.random.split(key, self.cfg.n_clients)
         new_params, losses = jax.vmap(
             lambda d, k: client_update(self.loss_fn, global_params, d, k,
                                        self.cfg.client)
         )(client_data, ckeys)
-        return pytree.client_matrix(new_params), jnp.mean(losses)
+        return pytree.client_matrix(new_params), losses
 
     def _round0(self, init_params, client_data, key):
-        """Round 0: ω^0 <- ClientUpdate(θ^(0)); strategy state init from ω^0."""
+        """Round 0: ω^0 <- ClientUpdate(θ^(0)); strategy state init from ω^0.
+
+        Always full-participation — the bootstrap census round every engine
+        shares (and which fills the ``semi_async`` buffer).
+        """
         key, k0, kc = jax.random.split(key, 3)
-        w0, loss0 = self._local_phase(init_params, client_data, k0)
+        w0, losses0 = self._local_phase(init_params, client_data, k0)
         state = self.strategy.init_state(kc, w0)
         res = self.strategy.round(w0, state)
         gp = pytree.unflatten(res.theta, init_params)
-        return key, gp, res.state, loss0, self.eval_fn(gp), res.metrics
+        return (key, gp, res.state, w0, jnp.mean(losses0), self.eval_fn(gp),
+                res.metrics)
 
     # -- engines -------------------------------------------------------------------
     # The jitted programs are memoized per Federation instance, so repeated
@@ -150,16 +228,17 @@ class Federation:
             def step(carry, _):
                 key, params, state = carry
                 key, kr = jax.random.split(key)
-                w, loss = self._local_phase(params, data, kr)
+                w, losses = self._local_phase(params, data, kr)
                 res = self.strategy.round(w, state)
                 gp = pytree.unflatten(res.theta, params)
                 acc = self.eval_fn(gp)
-                return (key, gp, res.state), (loss, acc, res.metrics)
+                return (key, gp, res.state), (jnp.mean(losses), acc,
+                                              res.metrics)
 
             return step
 
         def engine(params, client_data, key):
-            key, gp, state, loss0, acc0, m0 = self._round0(
+            key, gp, state, _, loss0, acc0, m0 = self._round0(
                 params, client_data, key)
             (_, gp, _), (loss, acc, m) = jax.lax.scan(
                 step_with(client_data), (key, gp, state), None,
@@ -181,10 +260,10 @@ class Federation:
     @functools.cached_property
     def _round_jit(self):
         def round_fn(params, state, client_data, kr):
-            w, loss = self._local_phase(params, client_data, kr)
+            w, losses = self._local_phase(params, client_data, kr)
             res = self.strategy.round(w, state)
-            return (pytree.unflatten(res.theta, params), res.state, loss,
-                    res.metrics)
+            return (pytree.unflatten(res.theta, params), res.state,
+                    jnp.mean(losses), res.metrics)
 
         return jax.jit(round_fn)
 
@@ -198,7 +277,7 @@ class Federation:
 
     def _run_python(self, init_params, client_data, key):
         """Legacy host loop: one jitted round program per step."""
-        key, gp, state, loss0, acc0, m0 = self._round0_jit(
+        key, gp, state, _, loss0, acc0, m0 = self._round0_jit(
             init_params, client_data, key)
         loss_l, acc_l = [loss0], [acc0]
         asg_l, cnt_l = [m0.assignment], [m0.counts]
@@ -213,7 +292,104 @@ class Federation:
                       assignment=jnp.stack(asg_l), counts=jnp.stack(cnt_l))
         return gp, History(trace=jax.device_get(trace))
 
-    _ENGINES = {"scan": _run_scan, "python": _run_python}
+    # -- the IoT-substrate engine ---------------------------------------------------
+
+    @functools.cached_property
+    def _fleet(self) -> sim_mod.DeviceFleet:
+        """The simulated device table (sampled once; deterministic in seed)."""
+        return sim_mod.make_fleet(self.cfg.sim.fleet, self.cfg.n_clients,
+                                  seed=self.cfg.sim.seed)
+
+    @functools.cached_property
+    def _semi_async_engine(self):
+        """Partial-participation engine with staleness-weighted merging.
+
+        Scan-carried substrate state: the (N, D) buffer of each client's
+        last *delivered* update, the (N,) integer staleness counters, and
+        the availability process.  Per round:
+
+          mask  <- availability ∧ (device round time <= deadline)
+          buf   <- fresh updates where present, else kept
+          tau   <- 0 where present, else tau + 1
+          θ     <- strategy.round(buf, state, mask=(1 + tau)^-alpha)
+
+        plus live clock/bytes accounting from :mod:`repro.sim.clock`.
+        """
+        cfg, scfg = self.cfg, self.cfg.sim
+        fleet, strategy = self._fleet, self.strategy
+
+        def step_with(data, dev_time):
+            def step(carry, _):
+                key, params, state, buf, tau, astate = carry
+                key, kr = jax.random.split(key)      # same chain as 'scan'
+                mask, astate = sim_mod.sample_mask(
+                    astate, fleet, scfg.participation,
+                    device_time=dev_time, deadline=scfg.deadline)
+                w, losses = self._local_phase(params, data, kr)
+                buf = jnp.where(mask[:, None], w, buf)
+                tau = jnp.where(mask, 0, tau + 1)
+                # tau == 0 (just delivered) decays to exactly 1.0, so under
+                # full participation eff is all-ones and the masked round is
+                # bit-identical to the synchronous one.
+                eff = sim_mod.staleness_weights(tau, scfg.staleness_alpha)
+                res = strategy.round(buf, state, mask=eff)
+                gp = pytree.unflatten(res.theta, params)
+                acc = self.eval_fn(gp)
+                # Participants' mean loss, phrased through the same jnp.mean
+                # as the idealized engines (scale is exactly 1.0 at full
+                # participation => bit-identical codegen).
+                m = mask.astype(jnp.float32)
+                scale = cfg.n_clients / jnp.maximum(jnp.sum(m), 1.0)
+                loss = jnp.mean(losses * (m * scale))
+                sim_t, wan, edge = sim_mod.round_stats(
+                    mask, dev_time, buf.shape[1] * BYTES_PER_PARAM,
+                    strategy.n_groups, strategy.hierarchical)
+                return ((key, gp, res.state, buf, tau, astate),
+                        (loss, acc, res.metrics, m, sim_t, wan, edge))
+
+            return step
+
+        def engine(params, client_data, key):
+            # Fork the availability stream off the run key WITHOUT consuming
+            # it, so the client-update key chain is identical to 'scan'.
+            akey = jax.random.fold_in(key, sim_mod.AVAILABILITY_STREAM)
+            key, gp, state, w0, loss0, acc0, m0 = self._round0(
+                params, client_data, key)
+            model_bytes = w0.shape[1] * BYTES_PER_PARAM
+            dev_time = sim_mod.device_round_time(fleet, model_bytes,
+                                                 scfg.local_work)
+            astate = sim_mod.init_availability(akey, fleet,
+                                               scfg.participation)
+            mask0 = jnp.ones((cfg.n_clients,), bool)     # bootstrap census
+            t0, wan0, edge0 = sim_mod.round_stats(
+                mask0, dev_time, model_bytes, strategy.n_groups,
+                strategy.hierarchical)
+            tau0 = jnp.zeros((cfg.n_clients,), jnp.int32)
+            carry0 = (key, gp, state, w0, tau0, astate)
+            (_, gp, *_), (loss, acc, m, pmask, sim_t, wan, edge) = \
+                jax.lax.scan(step_with(client_data, dev_time), carry0, None,
+                             length=cfg.rounds - 1)
+            trace = Trace(
+                loss=jnp.concatenate([loss0[None], loss]),
+                acc=jnp.concatenate([acc0[None], acc]),
+                assignment=jnp.concatenate([m0.assignment[None], m.assignment]),
+                counts=jnp.concatenate([m0.counts[None], m.counts]),
+                sim_time=jnp.concatenate([t0[None], sim_t]),
+                wan_bytes=jnp.concatenate([wan0[None], wan]),
+                edge_bytes=jnp.concatenate([edge0[None], edge]),
+                participation=jnp.concatenate(
+                    [mask0.astype(jnp.float32)[None], pmask]))
+            return gp, trace
+
+        return jax.jit(engine)
+
+    def _run_semi_async(self, init_params, client_data, key):
+        """Fleet-simulated federation as ONE jitted lax.scan program."""
+        gp, trace = self._semi_async_engine(init_params, client_data, key)
+        return gp, History(trace=jax.device_get(trace))
+
+    _ENGINES = {"scan": _run_scan, "python": _run_python,
+                "semi_async": _run_semi_async}
 
     def run(self, init_params: PyTree, client_data: PyTree, key: jax.Array,
             *, engine: str | None = None) -> tuple[PyTree, History]:
@@ -223,15 +399,15 @@ class Federation:
           init_params: θ^(0).
           client_data: pytree of arrays with leading dim (n_clients, n_local, ...).
           key: PRNG key (same key + same strategy => same History on either
-            engine).
-          engine: override ``cfg.engine`` ('scan' | 'python').
+            idealized engine; also on 'semi_async' over the 'ideal' fleet).
+          engine: override ``cfg.engine`` ('scan' | 'python' | 'semi_async').
         """
         name = engine if engine is not None else self.cfg.engine
         try:
             run_engine = self._ENGINES[name]
         except KeyError:
-            raise KeyError(f"unknown engine {name!r}; available: "
-                           f"{tuple(sorted(self._ENGINES))}") from None
+            raise ValueError(f"unknown engine {name!r}; registered engines: "
+                             f"{tuple(sorted(self._ENGINES))}") from None
         return run_engine(self, init_params, client_data, key)
 
 

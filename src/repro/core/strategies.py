@@ -5,8 +5,19 @@ future scenario) is a :class:`Strategy` with one uniform contract:
 
   ``init_state(key, w0) -> state``      — build the rule's own state pytree
                                           from the round-0 client weights
-  ``round(w, state) -> RoundResult``    — consume fresh (N, D) client weights,
-                                          emit θ, the next state, and metrics
+  ``round(w, state, mask=None)``        — consume the (N, D) client weight
+            ``-> RoundResult``            matrix, emit θ, the next state, and
+                                          metrics
+
+``mask`` is the IoT-substrate participation contract (``repro.sim`` / the
+``semi_async`` engine): an optional (N,) vector of per-client
+participation/staleness weights in [0, 1] — 1 for a client that delivered
+this round, staleness-decayed for a late (buffered) update, 0 for a client
+that must be excluded entirely.  ``mask=None`` is the synchronous path and
+every rule keeps it bit-identical to its pre-mask behaviour; an explicit
+all-ones mask is likewise bit-identical (rules weight by multiplying with
+the mask, and multiplying by exactly 1.0 is an identity), which is what
+lets ``semi_async`` reproduce ``scan`` exactly on an ideal fleet.
 
 State is opaque to the engine: the coalition rule carries its
 :class:`~repro.core.coalitions.CoalitionState` center indices, FedAvg carries
@@ -36,7 +47,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, ClassVar, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -76,18 +87,35 @@ class Strategy(abc.ABC):
     n_clients: int
     n_groups: int = 1
 
+    #: coalition-style rules set True: only ``n_groups`` barycenter-sized
+    #: models cross the WAN per round (members reach coalition heads over the
+    #: edge link) — the ``semi_async`` engine's live comm accounting keys off
+    #: this, mirroring :func:`repro.core.aggregation.comm_coalition`.
+    hierarchical: ClassVar[bool] = False
+
     @abc.abstractmethod
     def init_state(self, key: jax.Array, w0: jax.Array) -> PyTree:
         """State pytree from the round-0 client weight matrix ``w0``."""
 
     @abc.abstractmethod
-    def round(self, w: jax.Array, state: PyTree) -> RoundResult:
-        """One aggregation round over fresh client weights ``w``."""
+    def round(self, w: jax.Array, state: PyTree,
+              mask: jax.Array | None = None) -> RoundResult:
+        """One aggregation round over client weights ``w``.
 
-    def _flat_metrics(self) -> RoundMetrics:
-        """Everyone-in-group-0 metrics for non-partitioning rules."""
+        ``mask``: optional (N,) participation/staleness weights (see module
+        docstring); None = every client fresh and present.
+        """
+
+    def _flat_metrics(self, mask: jax.Array | None = None) -> RoundMetrics:
+        """Everyone-in-group-0 metrics for non-partitioning rules.
+
+        With a mask, group 0 reports the participating *mass* Σ_i m_i
+        (= the head-count when the mask is binary).
+        """
+        mass = (jnp.float32(self.n_clients) if mask is None
+                else jnp.sum(mask.astype(jnp.float32)))
         counts = jnp.zeros((self.n_groups,), jnp.float32)
-        counts = counts.at[0].set(float(self.n_clients))
+        counts = counts.at[0].set(mass)
         return RoundMetrics(
             assignment=jnp.zeros((self.n_clients,), jnp.int32), counts=counts)
 
@@ -145,10 +173,13 @@ class FedAvgStrategy(Strategy):
     def init_state(self, key, w0):
         return jnp.int32(0)                     # just a round counter
 
-    def round(self, w, state):
-        theta = aggregation.fedavg(w, self.client_weights)
+    def round(self, w, state, mask=None):
+        if mask is None:
+            theta = aggregation.fedavg(w, self.client_weights)
+        else:
+            theta = aggregation.fedavg_masked(w, mask, self.client_weights)
         return RoundResult(theta=theta, state=state + 1,
-                           metrics=self._flat_metrics())
+                           metrics=self._flat_metrics(mask))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,10 +198,15 @@ class TrimmedFedAvgStrategy(Strategy):
     def init_state(self, key, w0):
         return jnp.int32(0)
 
-    def round(self, w, state):
+    def round(self, w, state, mask=None):
+        # The trim budget is the robustness contract; under partial
+        # participation the mask reaches only the metrics — staleness enters
+        # through the buffered rows of ``w`` themselves, and a stale update
+        # that drifts far from the cohort is exactly what the coordinate-wise
+        # trim is built to discard.
         theta = aggregation.trimmed_mean(w, self.trim)
         return RoundResult(theta=theta, state=state + 1,
-                           metrics=self._flat_metrics())
+                           metrics=self._flat_metrics(mask))
 
 
 # --- coalition rules (Algorithm 1 family) ---------------------------------------
@@ -184,15 +220,25 @@ class CoalitionStrategy(Strategy):
         default_factory=lambda: bk.get_backend("xla"))
     client_weights: jax.Array | None = None
 
+    hierarchical: ClassVar[bool] = True
+
     def init_state(self, key, w0):
         return co.init_centers(key, w0, self.n_groups)
 
-    def _coalition_round(self, w, state) -> co.CoalitionRound:
+    def _coalition_round(self, w, state, mask=None) -> co.CoalitionRound:
+        # The participation mask folds into the barycenter client weights:
+        # present clients enter at full mass, late (buffered) updates at
+        # their staleness-decayed mass, excluded clients at 0 — coalition
+        # formation itself still places every buffered row, but barycenters
+        # (and hence θ) only aggregate the weighted present cohort.
+        cw = self.client_weights
+        if mask is not None:
+            cw = mask if cw is None else cw * mask
         return co.run_round(w, state, backend=self.backend,
-                            client_weights=self.client_weights)
+                            client_weights=cw)
 
-    def round(self, w, state):
-        r = self._coalition_round(w, state)
+    def round(self, w, state, mask=None):
+        r = self._coalition_round(w, state, mask)
         return RoundResult(theta=r.theta, state=r.state,
                            metrics=RoundMetrics(assignment=r.assignment,
                                                 counts=r.counts))
@@ -212,8 +258,8 @@ class TopKCoalitionStrategy(CoalitionStrategy):
                 f"top_m={self.top_m} must be in [1, n_coalitions="
                 f"{self.n_groups}]")
 
-    def round(self, w, state):
-        r = self._coalition_round(w, state)
+    def round(self, w, state, mask=None):
+        r = self._coalition_round(w, state, mask)
         _, top_idx = jax.lax.top_k(r.counts, self.top_m)
         theta = jnp.mean(r.barycenters[top_idx], axis=0)
         return RoundResult(theta=theta, state=r.state,

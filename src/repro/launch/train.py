@@ -26,9 +26,38 @@ import numpy as np
 from repro.core import strategies
 
 
+# which strategies actually consume each CLI hyper-parameter — factories
+# tolerate unknown kwargs (**_), so without this check a mismatched flag
+# would be silently ignored while still looking applied
+_EXTRA_CONSUMERS = {
+    "top_m": ("coalition_topk",),
+    "trim": ("fedavg_trimmed",),
+    "client_weights": ("fedavg_weighted", "coalition", "coalition_topk"),
+}
+
+
+def _strategy_extras(args) -> dict:
+    """Per-strategy hyper-parameters from the CLI (None = rule's default)."""
+    extras = {}
+    if args.top_m is not None:
+        extras["top_m"] = args.top_m
+    if args.trim is not None:
+        extras["trim"] = args.trim
+    if args.client_weights:
+        extras["client_weights"] = jnp.asarray(
+            [float(v) for v in args.client_weights.split(",")], jnp.float32)
+    for name in extras:
+        if args.method not in _EXTRA_CONSUMERS[name]:
+            raise SystemExit(
+                f"--{name.replace('_', '-')} applies only to "
+                f"{_EXTRA_CONSUMERS[name]}, not --method {args.method}")
+    return extras
+
+
 def run_fl(args) -> dict:
+    from repro import sim
     from repro.core.client import ClientConfig
-    from repro.core.server import FederationConfig, run_federation
+    from repro.core.server import Federation, FederationConfig
     from repro.data import loader, partition, synthetic
     from repro.models import cnn
 
@@ -43,24 +72,41 @@ def run_fl(args) -> dict:
     cd = jax.tree.map(jnp.asarray, loader.client_datasets(xtr, ytr, idx))
     xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
 
+    extras = _strategy_extras(args)
+    strategy = strategies.make_strategy(
+        args.method, n_clients=args.clients, n_coalitions=args.coalitions,
+        backend=args.backend, **extras)
     cfg = FederationConfig(
         n_clients=args.clients, n_coalitions=args.coalitions,
         rounds=args.rounds, method=args.method,
         client=ClientConfig(epochs=args.local_epochs,
                             batch_size=args.batch_size, lr=args.lr),
-        backend=args.backend, engine=args.engine)
+        backend=args.backend, engine=args.engine,
+        sim=sim.SimConfig(fleet=args.fleet, participation=args.participation,
+                          staleness_alpha=args.staleness,
+                          deadline=args.deadline, seed=args.sim_seed))
     params = cnn.init(jax.random.key(args.seed))
     t0 = time.time()
-    hist = run_federation(params, cnn.loss_fn,
-                          lambda p: cnn.accuracy(p, xte_j, yte_j),
-                          cd, jax.random.key(args.seed + 1), cfg)
+    fed = Federation(cnn.loss_fn, lambda p: cnn.accuracy(p, xte_j, yte_j),
+                     cfg, strategy=strategy)
+    _, hist = fed.run(params, cd, jax.random.key(args.seed + 1))
     out = {"mode": "fl", "method": args.method, "engine": args.engine,
            "regime": args.regime,
            "source": source, "rounds": hist.rounds,
+           "strategy_extras": {k: (v.tolist() if hasattr(v, "tolist") else v)
+                               for k, v in extras.items()},
            "test_acc": hist.test_acc, "train_loss": hist.train_loss,
            "final_assignment": hist.assignments[-1],
            "final_counts": hist.counts[-1],
            "wall_s": round(time.time() - t0, 1)}
+    if hist.sim_times is not None:      # the semi_async substrate accounting
+        out.update({
+            "fleet": args.fleet,
+            "sim_time_s": round(sum(hist.sim_times), 3),
+            "wan_MB": round(sum(hist.wan_bytes) / 1e6, 3),
+            "edge_MB": round(sum(hist.edge_bytes) / 1e6, 3),
+            "mean_participation": round(
+                float(np.mean(hist.participation)), 3)})
     print(json.dumps({k: v for k, v in out.items()
                       if k not in ("rounds",)}, indent=1, default=float))
     return out
@@ -124,8 +170,31 @@ def main() -> None:
     ap.add_argument("--n-test", type=int, default=4000)
     ap.add_argument("--backend", default="xla",
                     choices=["xla", "dot", "pallas"])
-    ap.add_argument("--engine", default="scan", choices=["scan", "python"],
-                    help="fully-jitted lax.scan round loop vs legacy host loop")
+    ap.add_argument("--engine", default="scan",
+                    choices=["scan", "python", "semi_async"],
+                    help="fully-jitted lax.scan round loop, legacy host "
+                         "loop, or the IoT-substrate partial-participation "
+                         "engine")
+    # fl: per-strategy hyper-parameters (None -> the rule's default)
+    ap.add_argument("--top-m", type=int, default=None,
+                    help="coalition_topk: aggregate only the top_m largest "
+                         "coalitions")
+    ap.add_argument("--trim", type=int, default=None,
+                    help="fedavg_trimmed: per-coordinate trim count")
+    ap.add_argument("--client-weights", default=None,
+                    help="comma-separated per-client weights (fedavg_weighted"
+                         " / coalition barycenters), e.g. '1,1,2,4'")
+    # fl: IoT substrate (engine=semi_async)
+    ap.add_argument("--fleet", default="ideal",
+                    help="fleet profile name (see repro.sim.available_fleets)")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="global scale on per-device availability")
+    ap.add_argument("--staleness", type=float, default=0.5,
+                    help="staleness decay exponent alpha in (1+tau)^-alpha")
+    ap.add_argument("--deadline", type=float, default=float("inf"),
+                    help="round deadline in simulated seconds")
+    ap.add_argument("--sim-seed", type=int, default=0,
+                    help="fleet sampling seed")
     # pretrain
     ap.add_argument("--arch", default="hymba-1.5b")
     ap.add_argument("--reduced", action="store_true")

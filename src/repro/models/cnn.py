@@ -25,6 +25,20 @@ class CNNConfig(NamedTuple):
     n_classes: int = 10
     in_hw: int = 28
 
+    def n_params(self) -> int:
+        """Parameter count of the :func:`init` pytree (582,026 at defaults).
+
+        Single source of truth for comm accounting — ``benchmarks/comm_cost``
+        derives the paper-CNN row from this instead of a pinned constant.
+        """
+        spatial = (self.in_hw - self.kernel + 1) // 2     # conv1 + pool
+        spatial = (spatial - self.kernel + 1) // 2        # conv2 + pool
+        flat = spatial * spatial * self.c2
+        return (self.kernel * self.kernel * self.c1 + self.c1
+                + self.kernel * self.kernel * self.c1 * self.c2 + self.c2
+                + flat * self.fc + self.fc
+                + self.fc * self.n_classes + self.n_classes)
+
 
 def init(key: jax.Array, cfg: CNNConfig = CNNConfig(), dtype=jnp.float32):
     k1, k2, k3, k4 = jax.random.split(key, 4)

@@ -1,0 +1,57 @@
+"""IoT substrate — device/network simulation under the federation engine.
+
+The paper's deployment story is a fleet of heterogeneous IoT devices
+talking to a server over constrained links, yet an idealized reproduction
+simulates every client as always-on and infinitely fast.  This package is
+the missing substrate.  Its model has three orthogonal pieces:
+
+**Devices** (:mod:`repro.sim.devices`) — a :class:`DeviceFleet` is a static
+per-device table (compute seconds per unit of local work, uplink/downlink
+bytes-per-second, stationary availability probability, outage burstiness)
+sampled once from a named *fleet profile* (``ideal``, ``uniform``,
+``lognormal-edge``, ``cellular-flaky``) and an integer seed.  Same profile
++ seed + size ⇒ the identical table, always.
+
+**Availability** (:mod:`repro.sim.availability`) — a two-state Markov
+process per device yields the per-round participation mask; persistence
+makes outages bursty while preserving the stationary rate.  The process
+runs on its own PRNG stream (``fold_in`` of the run key), leaving the
+engine's client-update key chain untouched.
+
+**Clock** (:mod:`repro.sim.clock`) — live per-round accounting: round
+simulated time = the slowest participating device's
+download + compute + upload path; bytes-on-the-wire split into WAN vs edge
+following the strategy's topology (flat rules ship every participant over
+the WAN; coalition rules ship members to heads over the edge and only the
+barycenters over the WAN).  Staleness decay ``(1 + tau)^-alpha`` for late
+updates also lives here.
+
+The ``semi_async`` engine (:mod:`repro.core.server`) composes the three
+inside one ``jax.lax.scan`` program: absent clients keep their last
+delivered update buffered, staleness-decayed, and every registered
+strategy aggregates through its participation-mask contract.  On the
+``ideal`` profile the whole substrate reduces to exact no-ops and the
+engine reproduces ``scan`` bit-for-bit.
+"""
+from repro.sim.availability import (AVAILABILITY_STREAM, AvailabilityState,
+                                    effective_p, init_availability,
+                                    sample_mask)
+from repro.sim.clock import device_round_time, round_stats, staleness_weights
+from repro.sim.devices import (DeviceFleet, SimConfig, available_fleets,
+                               make_fleet, register_fleet)
+
+__all__ = [
+    "AVAILABILITY_STREAM",
+    "AvailabilityState",
+    "DeviceFleet",
+    "SimConfig",
+    "available_fleets",
+    "device_round_time",
+    "effective_p",
+    "init_availability",
+    "make_fleet",
+    "register_fleet",
+    "round_stats",
+    "sample_mask",
+    "staleness_weights",
+]

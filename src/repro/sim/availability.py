@@ -1,0 +1,72 @@
+"""Per-round device availability — a jittable two-state Markov process.
+
+Each device is *online* or *offline*; every round its state persists with
+probability ``fleet.persistence`` and is otherwise resampled as
+Bernoulli(p_eff), where ``p_eff = clip(p_available * participation, 0, 1)``.
+``persistence = 0`` degenerates to i.i.d. Bernoulli participation;
+``persistence -> 1`` produces the long bursty outages of cellular fleets
+(Gilbert-Elliott-style).  The stationary marginal stays ``p_eff`` either
+way, so ``participation`` is an interpretable knob.
+
+The process carries its own PRNG key, derived from the run key via
+``jax.random.fold_in(key, AVAILABILITY_STREAM)`` *without consuming it* —
+the engine's client-update key chain is untouched, which is what makes the
+``semi_async`` engine bit-for-bit equal to ``scan`` on the ``ideal`` fleet.
+
+Everything here is shape-static masked computation, safe inside
+``jax.lax.scan``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim.devices import DeviceFleet
+
+# fold_in tag decoupling the availability PRNG stream from the engine's
+# client-update key chain.
+AVAILABILITY_STREAM = 0x10A7
+
+
+class AvailabilityState(NamedTuple):
+    """Scan-carried availability bookkeeping."""
+
+    key: jax.Array      # PRNG key for the availability stream
+    online: jax.Array   # (N,) bool — current Markov state
+
+
+def effective_p(fleet: DeviceFleet, participation: float = 1.0) -> jax.Array:
+    """Per-device round-availability probability after the global scale."""
+    return jnp.clip(fleet.p_available * jnp.float32(participation), 0.0, 1.0)
+
+
+def init_availability(key: jax.Array, fleet: DeviceFleet,
+                      participation: float = 1.0) -> AvailabilityState:
+    """Start the process in its stationary distribution."""
+    key, k0 = jax.random.split(key)
+    online = jax.random.bernoulli(k0, effective_p(fleet, participation))
+    return AvailabilityState(key=key, online=online)
+
+
+def sample_mask(state: AvailabilityState, fleet: DeviceFleet,
+                participation: float = 1.0,
+                device_time: jax.Array | None = None,
+                deadline: float = float("inf"),
+                ) -> tuple[jax.Array, AvailabilityState]:
+    """Advance one round; returns ``((N,) bool participation mask, state')``.
+
+    A device participates iff its Markov state is online AND (when
+    ``device_time`` is given) it can finish download+compute+upload within
+    ``deadline`` simulated seconds — the deadline is how slow devices become
+    stragglers rather than participants.
+    """
+    key, k_stay, k_fresh = jax.random.split(state.key, 3)
+    stay = jax.random.bernoulli(k_stay, fleet.persistence)
+    fresh = jax.random.bernoulli(k_fresh, effective_p(fleet, participation))
+    online = jnp.where(stay, state.online, fresh)
+    mask = online
+    if device_time is not None:
+        mask = jnp.logical_and(mask, device_time <= jnp.float32(deadline))
+    return mask, AvailabilityState(key=key, online=online)

@@ -1,0 +1,65 @@
+"""Simulated wall-clock, staleness decay, and bytes-on-the-wire accounting.
+
+Turns the static comm-cost *table* (``benchmarks/comm_cost.py``) into live
+per-round accounting inside the federation engine: every round the engine
+records how long the round took on the simulated fleet and how many bytes
+crossed the WAN and the edge links.  All functions are jittable and
+shape-static, so they run inside the scanned round program.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim.devices import DeviceFleet
+
+
+def staleness_weights(tau: jax.Array, alpha: float = 0.5) -> jax.Array:
+    """Polynomial staleness decay ``(1 + tau)^-alpha`` (FedAsync family).
+
+    ``tau`` is the per-client integer staleness (rounds since the buffered
+    update was computed); ``tau = 0`` maps to exactly 1.0, so fresh updates
+    are bit-identically unweighted.  ``alpha = 0`` disables the decay.
+    """
+    return (1.0 + tau.astype(jnp.float32)) ** jnp.float32(-alpha)
+
+
+def device_round_time(fleet: DeviceFleet, model_bytes: float,
+                      local_work: float = 1.0) -> jax.Array:
+    """(N,) seconds for one full round on each device.
+
+    download θ  +  ``local_work`` units of compute  +  upload ω — the
+    device-side critical path.  Infinite link rates and zero compute (the
+    ``ideal`` fleet) give exactly 0.0.
+    """
+    b = jnp.float32(model_bytes)
+    return (b / fleet.downlink_bps
+            + jnp.float32(local_work) * fleet.compute_s
+            + b / fleet.uplink_bps)
+
+
+def round_stats(mask: jax.Array, device_time: jax.Array, model_bytes: float,
+                n_groups: int, hierarchical: bool,
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-round ``(sim_time_s, wan_bytes, edge_bytes)`` for one round.
+
+    ``sim_time`` is the synchronization point: the slowest *participating*
+    device (the round's straggler).  Byte accounting mirrors
+    :func:`repro.core.aggregation.comm_coalition` /
+    :func:`~repro.core.aggregation.comm_fedavg`: flat rules ship every
+    participant's full model over the WAN both ways; hierarchical
+    (coalition) rules ship participants to coalition heads over the edge
+    link and only ``min(K, n_present)`` barycenter-sized models over the
+    WAN.
+    """
+    m = mask.astype(jnp.float32)
+    n_present = jnp.sum(m)
+    sim_time = jnp.max(jnp.where(mask, device_time, 0.0))
+    traffic = 2.0 * jnp.float32(model_bytes)       # up + down per model
+    if hierarchical:
+        wan = jnp.minimum(jnp.float32(n_groups), n_present) * traffic
+        edge = n_present * traffic
+    else:
+        wan = n_present * traffic
+        edge = jnp.float32(0.0)
+    return sim_time, wan, edge

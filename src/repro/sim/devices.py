@@ -1,0 +1,172 @@
+"""Device fleets — per-device hardware/network tables and named profiles.
+
+A :class:`DeviceFleet` is the static description of an IoT client
+population: how fast each device computes one unit of local work, how fat
+its uplink/downlink is, and how likely it is to be reachable in any given
+round (plus how *bursty* that reachability is).  Fleets are sampled once,
+host-side, from a named profile + integer seed, so the same
+``(profile, seed, n_clients)`` triple always yields the identical device
+table — the substrate is a reproducible scenario, not a noise source.
+
+Profiles are a registry, mirroring the strategy/backend registries::
+
+    @register_fleet("my-testbed")
+    def _make(key, n_clients) -> DeviceFleet: ...
+
+    fleet = make_fleet("cellular-flaky", 10, seed=0)
+
+Built-ins:
+
+  ``ideal``           — full participation, zero latency: infinite links,
+                        instant compute, p_available = 1.  The identity
+                        profile: the ``semi_async`` engine on it reproduces
+                        the ``scan`` engine bit-for-bit.
+  ``uniform``         — heterogeneous but well-behaved: speeds and link
+                        rates uniform over a moderate range, every device
+                        always reachable (stragglers only via a deadline).
+  ``lognormal-edge``  — edge-server-grade fleet with log-normal compute and
+                        bandwidth tails (a few devices are much slower);
+                        high but imperfect availability.
+  ``cellular-flaky``  — battery/cellular devices: thin, heavy-tailed
+                        uplinks, low and *bursty* availability (high
+                        persistence => outages span consecutive rounds).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SimConfig(NamedTuple):
+    """Substrate knobs the federation engine consumes.
+
+    ``fleet``           — registered fleet-profile name.
+    ``participation``   — global scale on per-device availability
+                          probability (0..1); 1 keeps the profile as-is.
+    ``staleness_alpha`` — exponent of the polynomial staleness decay
+                          ``(1 + tau)^-alpha`` applied to late updates.
+    ``deadline``        — round deadline in simulated seconds; devices whose
+                          download+compute+upload exceeds it miss the round.
+    ``local_work``      — simulated compute units one local round costs
+                          (scales ``DeviceFleet.compute_s``).
+    ``seed``            — fleet-sampling seed (device table + availability
+                          stream are functions of this and the run key).
+    """
+
+    fleet: str = "ideal"
+    participation: float = 1.0
+    staleness_alpha: float = 0.5
+    deadline: float = float("inf")
+    local_work: float = 1.0
+    seed: int = 0
+
+
+class DeviceFleet(NamedTuple):
+    """Static per-device table; every field is a ``(n_clients,)`` float32."""
+
+    compute_s: jax.Array     # seconds per unit of local work
+    uplink_bps: jax.Array    # uplink bytes/second
+    downlink_bps: jax.Array  # downlink bytes/second
+    p_available: jax.Array   # stationary per-round availability probability
+    persistence: jax.Array   # P(availability state persists round->round);
+    #                          0 = memoryless, ->1 = long bursty outages
+
+
+_FLEETS: dict[str, Callable[[jax.Array, int], DeviceFleet]] = {}
+
+
+def register_fleet(name: str) -> Callable:
+    """Decorator: register a fleet-profile factory under ``name``.
+
+    The factory receives ``(key, n_clients)`` and returns a
+    :class:`DeviceFleet`; it must be a pure function of both so fleets are
+    reproducible.
+    """
+
+    def deco(factory: Callable[[jax.Array, int], DeviceFleet]):
+        _FLEETS[name] = factory
+        return factory
+
+    return deco
+
+
+def make_fleet(name: str, n_clients: int, *, seed: int = 0) -> DeviceFleet:
+    """Sample the device table for profile ``name`` (deterministic in seed)."""
+    try:
+        factory = _FLEETS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown fleet profile {name!r}; available: {available_fleets()}"
+        ) from None
+    if n_clients < 1:
+        raise ValueError(f"n_clients={n_clients} must be >= 1")
+    return factory(jax.random.key(seed), n_clients)
+
+
+def available_fleets() -> tuple[str, ...]:
+    return tuple(sorted(_FLEETS))
+
+
+def _full(n: int, v: float) -> jax.Array:
+    return jnp.full((n,), v, jnp.float32)
+
+
+def _lognormal(key: jax.Array, n: int, median: float, sigma: float) -> jax.Array:
+    """Log-normal samples with the given median and log-space sigma."""
+    z = jax.random.normal(key, (n,), jnp.float32)
+    return jnp.float32(median) * jnp.exp(sigma * z)
+
+
+@register_fleet("ideal")
+def _ideal(key: jax.Array, n: int) -> DeviceFleet:
+    return DeviceFleet(
+        compute_s=_full(n, 0.0),
+        uplink_bps=_full(n, jnp.inf),
+        downlink_bps=_full(n, jnp.inf),
+        p_available=_full(n, 1.0),
+        persistence=_full(n, 0.0),
+    )
+
+
+@register_fleet("uniform")
+def _uniform(key: jax.Array, n: int) -> DeviceFleet:
+    kc, ku, kd = jax.random.split(key, 3)
+    u = lambda k, lo, hi: jax.random.uniform(
+        k, (n,), jnp.float32, minval=lo, maxval=hi)
+    return DeviceFleet(
+        compute_s=u(kc, 0.5, 2.0),
+        uplink_bps=u(ku, 1e6, 10e6),       # 1-10 MB/s
+        downlink_bps=u(kd, 5e6, 20e6),
+        p_available=_full(n, 1.0),
+        persistence=_full(n, 0.0),
+    )
+
+
+@register_fleet("lognormal-edge")
+def _lognormal_edge(key: jax.Array, n: int) -> DeviceFleet:
+    kc, ku, kp = jax.random.split(key, 3)
+    up = _lognormal(ku, n, 2e6, 0.8)
+    return DeviceFleet(
+        compute_s=_lognormal(kc, n, 1.0, 0.75),
+        uplink_bps=up,
+        downlink_bps=4.0 * up,             # asymmetric last-mile links
+        p_available=jax.random.uniform(kp, (n,), jnp.float32,
+                                       minval=0.85, maxval=1.0),
+        persistence=_full(n, 0.3),
+    )
+
+
+@register_fleet("cellular-flaky")
+def _cellular_flaky(key: jax.Array, n: int) -> DeviceFleet:
+    kc, ku, kp = jax.random.split(key, 3)
+    up = _lognormal(ku, n, 2.5e5, 1.25)    # thin, heavy-tailed cellular uplink
+    return DeviceFleet(
+        compute_s=_lognormal(kc, n, 1.5, 1.0),
+        uplink_bps=up,
+        downlink_bps=8.0 * up,
+        p_available=jax.random.uniform(kp, (n,), jnp.float32,
+                                       minval=0.4, maxval=0.9),
+        persistence=_full(n, 0.5),         # bursty multi-round outages
+    )

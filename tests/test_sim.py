@@ -1,0 +1,381 @@
+"""IoT substrate tests: fleet determinism, availability, clock accounting,
+the masked strategy contract, and the ``semi_async`` engine (including the
+bit-for-bit scan equivalence on the ideal fleet)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sim
+from repro.core import aggregation, coalitions, strategies
+from repro.core.client import ClientConfig
+from repro.core.server import Federation, FederationConfig
+
+N_CLIENTS, N_LOCAL, DIM = 6, 20, 12
+
+
+def _rand_w(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def lsq():
+    """Tiny least-squares federation problem (fast to compile)."""
+    kx, kw, kt = jax.random.split(jax.random.key(0), 3)
+    x = jax.random.normal(kx, (N_CLIENTS, N_LOCAL, DIM))
+    w_true = jax.random.normal(kw, (DIM,))
+    y = x @ w_true + 0.1 * jax.random.normal(kt, (N_CLIENTS, N_LOCAL))
+
+    def loss_fn(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    xe = x.reshape(-1, DIM)[:40]
+    ye = (x @ w_true).reshape(-1)[:40]
+    eval_fn = lambda p: -jnp.mean((xe @ p["w"] - ye) ** 2)
+    return loss_fn, eval_fn, {"x": x, "y": y}, {"w": jnp.zeros((DIM,))}
+
+
+def _cfg(method="coalition", rounds=4, engine="scan", **sim_kw):
+    return FederationConfig(
+        n_clients=N_CLIENTS, n_coalitions=2, rounds=rounds, method=method,
+        client=ClientConfig(epochs=1, batch_size=10, lr=0.01),
+        engine=engine, sim=sim.SimConfig(**sim_kw))
+
+
+# --- fleet profiles ---------------------------------------------------------------
+
+class TestFleets:
+    def test_builtin_profiles_registered(self):
+        for name in ("ideal", "uniform", "lognormal-edge", "cellular-flaky"):
+            assert name in sim.available_fleets()
+
+    def test_unknown_profile_lists_options(self):
+        with pytest.raises(ValueError, match="unknown fleet profile"):
+            sim.make_fleet("marsnet", 4)
+
+    @pytest.mark.parametrize("name", ["ideal", "uniform", "lognormal-edge",
+                                      "cellular-flaky"])
+    def test_sampling_deterministic(self, name):
+        """Same profile + seed + size => identical device table."""
+        a = sim.make_fleet(name, 8, seed=5)
+        b = sim.make_fleet(name, 8, seed=5)
+        for fa, fb in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+        assert all(f.shape == (8,) for f in a)
+
+    def test_different_seed_differs(self):
+        a = sim.make_fleet("cellular-flaky", 8, seed=0)
+        b = sim.make_fleet("cellular-flaky", 8, seed=1)
+        assert not np.array_equal(np.asarray(a.compute_s),
+                                  np.asarray(b.compute_s))
+
+    def test_ideal_is_identity_profile(self):
+        f = sim.make_fleet("ideal", 5)
+        np.testing.assert_array_equal(np.asarray(f.p_available), 1.0)
+        t = sim.device_round_time(f, model_bytes=1e6)
+        np.testing.assert_array_equal(np.asarray(t), 0.0)
+
+    def test_register_roundtrip(self):
+        @sim.register_fleet("_test_fleet")
+        def _make(key, n):
+            return sim.make_fleet("ideal", n)
+
+        try:
+            assert "_test_fleet" in sim.available_fleets()
+            assert sim.make_fleet("_test_fleet", 3).compute_s.shape == (3,)
+        finally:
+            del sim.devices._FLEETS["_test_fleet"]
+
+
+# --- availability process ---------------------------------------------------------
+
+class TestAvailability:
+    def _masks(self, fleet, key, rounds=20, **kw):
+        st = sim.init_availability(key, fleet)
+        out = []
+        for _ in range(rounds):
+            m, st = sim.sample_mask(st, fleet, **kw)
+            out.append(np.asarray(m))
+        return np.stack(out)
+
+    def test_masks_deterministic(self):
+        fleet = sim.make_fleet("cellular-flaky", 10, seed=2)
+        k = jax.random.key(3)
+        np.testing.assert_array_equal(self._masks(fleet, k),
+                                      self._masks(fleet, k))
+
+    def test_ideal_always_full(self):
+        fleet = sim.make_fleet("ideal", 7)
+        assert self._masks(fleet, jax.random.key(0)).all()
+
+    def test_flaky_is_partial(self):
+        fleet = sim.make_fleet("cellular-flaky", 10, seed=0)
+        masks = self._masks(fleet, jax.random.key(1), rounds=40)
+        rate = masks.mean()
+        assert 0.1 < rate < 0.95           # neither empty nor full
+
+    def test_participation_scale(self):
+        fleet = sim.make_fleet("uniform", 10, seed=0)      # p_available = 1
+        half = self._masks(fleet, jax.random.key(2), rounds=60,
+                           participation=0.5)
+        assert 0.3 < half.mean() < 0.7
+
+    def test_deadline_drops_slow_devices(self):
+        fleet = sim.make_fleet("uniform", 6, seed=0)
+        t = sim.device_round_time(fleet, model_bytes=4e6)
+        deadline = float(np.median(np.asarray(t)))
+        st = sim.init_availability(jax.random.key(0), fleet)
+        m, _ = sim.sample_mask(st, fleet, device_time=t, deadline=deadline)
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(t) <= deadline)
+
+
+# --- clock / accounting -----------------------------------------------------------
+
+class TestClock:
+    def test_staleness_weights(self):
+        tau = jnp.array([0, 1, 2, 10], jnp.int32)
+        w = np.asarray(sim.staleness_weights(tau, alpha=0.5))
+        assert w[0] == 1.0                         # fresh => exactly 1
+        assert np.all(np.diff(w) < 0)              # strictly decaying
+        np.testing.assert_allclose(
+            np.asarray(sim.staleness_weights(tau, alpha=0.0)), 1.0)
+
+    def test_round_stats_flat_matches_comm_model(self):
+        mask = jnp.array([True, True, False, True])
+        t = jnp.array([1.0, 5.0, 99.0, 2.0])
+        d, bpp = 1000, 4
+        sim_t, wan, edge = sim.round_stats(mask, t, d * bpp, n_groups=2,
+                                           hierarchical=False)
+        ref = aggregation.comm_fedavg(3, d, bpp)   # 3 participants
+        assert float(wan) == ref.wan_up + ref.wan_down
+        assert float(edge) == 0.0
+        assert float(sim_t) == 5.0                 # slowest participant only
+
+    def test_round_stats_hierarchical_matches_comm_model(self):
+        mask = jnp.ones((10,), bool)
+        t = jnp.zeros((10,))
+        d, bpp, k = 1000, 4, 3
+        _, wan, edge = sim.round_stats(mask, t, d * bpp, n_groups=k,
+                                       hierarchical=True)
+        ref = aggregation.comm_coalition(10, k, d, bpp)
+        assert float(wan) == ref.wan_up + ref.wan_down
+        assert float(edge) == ref.edge_up + ref.edge_down
+
+    def test_hierarchical_wan_capped_by_participants(self):
+        mask = jnp.array([True] + [False] * 9)     # 1 participant < K heads
+        _, wan, _ = sim.round_stats(mask, jnp.zeros((10,)), 4000, n_groups=3,
+                                    hierarchical=True)
+        assert float(wan) == 1 * 2 * 4000
+
+
+# --- the masked strategy contract -------------------------------------------------
+
+class TestMaskedStrategies:
+    def test_fedavg_masked_selects_rows(self):
+        w = _rand_w(6, 40, seed=1)
+        mask = jnp.array([1.0, 0.0, 1.0, 0.0, 0.0, 1.0])
+        got = aggregation.fedavg_masked(w, mask)
+        ref = np.asarray(w)[[0, 2, 5]].mean(axis=0)
+        np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-5)
+
+    def test_fedavg_masked_all_ones_bit_identical(self):
+        w = _rand_w(9, 33, seed=2)
+        np.testing.assert_array_equal(
+            np.asarray(aggregation.fedavg_masked(w, jnp.ones((9,)))),
+            np.asarray(aggregation.fedavg(w)))
+
+    def test_strategy_round_masked_all_ones_bit_identical(self):
+        w = _rand_w(8, 50, seed=3)
+        ones = jnp.ones((8,), jnp.float32)
+        for name in strategies.available_strategies():
+            s = strategies.make_strategy(name, n_clients=8, n_coalitions=3)
+            st = s.init_state(jax.random.key(0), w)
+            a = s.round(w, st)
+            b = s.round(w, st, mask=ones)
+            np.testing.assert_array_equal(np.asarray(a.theta),
+                                          np.asarray(b.theta), err_msg=name)
+            np.testing.assert_array_equal(np.asarray(a.metrics.counts),
+                                          np.asarray(b.metrics.counts),
+                                          err_msg=name)
+
+    def test_coalition_mask_downweights_member(self):
+        """A near-zero-mass client barely moves its coalition barycenter."""
+        w = _rand_w(6, 30, seed=4)
+        s = strategies.make_strategy("coalition", n_clients=6, n_coalitions=2)
+        st = s.init_state(jax.random.key(1), w)
+        full = s.round(w, st)
+        mask = jnp.ones((6,)).at[4].set(1e-6)
+        damped = s.round(w, st, mask=mask)
+        # reference: drop client 4 entirely from its coalition's mean
+        asg = np.asarray(full.metrics.assignment)
+        others = [i for i in range(6) if i != 4 and asg[i] == asg[4]]
+        if others:          # client 4 may be a singleton for some draws
+            ref = np.asarray(w)[others].mean(axis=0)
+            bary = np.asarray(coalitions.run_round(
+                w, st, client_weights=mask).barycenters)[asg[4]]
+            np.testing.assert_allclose(bary, ref, rtol=1e-3, atol=1e-4)
+        assert not np.array_equal(np.asarray(full.theta),
+                                  np.asarray(damped.theta))
+
+    def test_zero_mass_mask_degrades_to_zero_not_nan(self):
+        """Both FedAvg mask paths share the clamped failure mode: an
+        all-zero mask gives θ = 0, never NaN."""
+        w = _rand_w(5, 20, seed=7)
+        zeros = jnp.zeros((5,))
+        for name in ("fedavg", "fedavg_weighted"):
+            s = strategies.make_strategy(name, n_clients=5,
+                                         client_weights=jnp.arange(1.0, 6.0))
+            res = s.round(w, s.init_state(jax.random.key(0), w), mask=zeros)
+            np.testing.assert_array_equal(np.asarray(res.theta), 0.0,
+                                          err_msg=name)
+
+    def test_cli_extras_must_match_method(self):
+        """launch/train rejects hyper-parameter flags the chosen strategy
+        would silently ignore (factories tolerate unknown kwargs)."""
+        import argparse
+
+        from repro.launch.train import _strategy_extras
+
+        ns = argparse.Namespace(method="fedavg", top_m=None, trim=2,
+                                client_weights=None)
+        with pytest.raises(SystemExit, match="--trim applies only to"):
+            _strategy_extras(ns)
+        ns = argparse.Namespace(method="fedavg_trimmed", top_m=None, trim=2,
+                                client_weights=None)
+        assert _strategy_extras(ns) == {"trim": 2}
+
+    def test_flat_metrics_report_mass(self):
+        s = strategies.make_strategy("fedavg", n_clients=5, n_coalitions=2)
+        m = s._flat_metrics(jnp.array([1.0, 1.0, 0.5, 0.0, 0.0]))
+        assert float(m.counts[0]) == pytest.approx(2.5)
+
+
+# --- eager config validation ------------------------------------------------------
+
+class TestEagerValidation:
+    def test_unknown_engine_at_construction(self, lsq):
+        loss_fn, eval_fn, _, _ = lsq
+        with pytest.raises(ValueError, match="unknown engine 'warp'.*scan"):
+            Federation(loss_fn, eval_fn, _cfg(engine="warp"))
+
+    def test_unknown_backend_at_construction(self, lsq):
+        loss_fn, eval_fn, _, _ = lsq
+        cfg = _cfg(method="fedavg")._replace(backend="cuda9")
+        with pytest.raises(ValueError, match="unknown backend 'cuda9'.*xla"):
+            Federation(loss_fn, eval_fn, cfg)
+
+    def test_unknown_fleet_at_construction(self, lsq):
+        loss_fn, eval_fn, _, _ = lsq
+        with pytest.raises(ValueError, match="unknown fleet profile.*ideal"):
+            Federation(loss_fn, eval_fn, _cfg(fleet="marsnet"))
+
+
+# --- the semi_async engine --------------------------------------------------------
+
+class TestSemiAsyncEngine:
+    @pytest.mark.parametrize("method", sorted(strategies._STRATEGIES))
+    def test_ideal_fleet_bit_identical_to_scan(self, lsq, method):
+        """Acceptance: every registered strategy runs on semi_async, and on a
+        full-participation/zero-latency profile it reproduces the scan
+        engine's per-round θ and History bit-for-bit on a fixed seed."""
+        loss_fn, eval_fn, cd, params = lsq
+        fed = Federation(loss_fn, eval_fn, _cfg(method=method, fleet="ideal"))
+        key = jax.random.key(7)
+        gp_s, h_s = fed.run(params, cd, key, engine="scan")
+        gp_a, h_a = fed.run(params, cd, key, engine="semi_async")
+        np.testing.assert_array_equal(np.asarray(gp_s["w"]),
+                                      np.asarray(gp_a["w"]))
+        for field in ("loss", "acc", "assignment", "counts"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(h_s.trace, field)),
+                np.asarray(getattr(h_a.trace, field)), err_msg=field)
+        # the substrate itself is idle: full participation, zero cost
+        assert np.asarray(h_a.trace.participation).all()
+        np.testing.assert_array_equal(np.asarray(h_a.trace.sim_time), 0.0)
+
+    def test_trace_substrate_fields(self, lsq):
+        loss_fn, eval_fn, cd, params = lsq
+        rounds = 5
+        fed = Federation(loss_fn, eval_fn,
+                         _cfg(rounds=rounds, engine="semi_async",
+                              fleet="cellular-flaky", seed=3))
+        _, hist = fed.run(params, cd, jax.random.key(1))
+        tr = hist.trace
+        assert tr.sim_time.shape == (rounds,)
+        assert tr.wan_bytes.shape == (rounds,)
+        assert tr.edge_bytes.shape == (rounds,)
+        assert tr.participation.shape == (rounds, N_CLIENTS)
+        part = np.asarray(tr.participation)
+        assert part[0].all()                       # bootstrap census round
+        assert part.sum() < part.size              # ...then partial
+        assert np.isfinite(hist.test_acc).all()
+        assert np.isfinite(hist.train_loss).all()
+        # coalition is hierarchical: per-round WAN <= 2K models, edge carries
+        # participants
+        d_bytes = DIM * 4
+        assert max(hist.wan_bytes) <= 2 * 2 * d_bytes      # K=2 coalitions
+        np.testing.assert_allclose(
+            np.asarray(tr.edge_bytes),
+            part.sum(axis=1) * 2 * d_bytes, rtol=1e-6)
+        # legacy engines leave the substrate fields empty
+        _, h_scan = fed.run(params, cd, jax.random.key(1), engine="scan")
+        assert h_scan.trace.sim_time is None and h_scan.sim_times is None
+
+    def test_flat_strategy_wan_scales_with_participants(self, lsq):
+        loss_fn, eval_fn, cd, params = lsq
+        fed = Federation(loss_fn, eval_fn,
+                         _cfg(method="fedavg", rounds=6,
+                              engine="semi_async", fleet="cellular-flaky",
+                              seed=11))
+        _, hist = fed.run(params, cd, jax.random.key(2))
+        part = np.asarray(hist.trace.participation)
+        np.testing.assert_allclose(np.asarray(hist.trace.wan_bytes),
+                                   part.sum(axis=1) * 2 * DIM * 4, rtol=1e-6)
+        assert np.asarray(hist.trace.edge_bytes).sum() == 0.0
+
+    def test_semi_async_deterministic(self, lsq):
+        """Same run key + same fleet seed => identical History (masks and
+        all) — the substrate is a scenario, not a noise source."""
+        loss_fn, eval_fn, cd, params = lsq
+        fed = Federation(loss_fn, eval_fn,
+                         _cfg(rounds=5, engine="semi_async",
+                              fleet="lognormal-edge", seed=4))
+        _, h1 = fed.run(params, cd, jax.random.key(9))
+        _, h2 = fed.run(params, cd, jax.random.key(9))
+        for f1, f2 in zip(h1.trace, h2.trace):
+            np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+
+    def test_staleness_alpha_changes_theta(self, lsq):
+        loss_fn, eval_fn, cd, params = lsq
+        key = jax.random.key(5)
+        thetas = []
+        for alpha in (0.0, 2.0):
+            fed = Federation(
+                loss_fn, eval_fn,
+                _cfg(method="fedavg", rounds=6, engine="semi_async",
+                     fleet="cellular-flaky", seed=6, staleness_alpha=alpha))
+            gp, hist = fed.run(params, cd, key)
+            assert np.asarray(hist.trace.participation).sum() \
+                < hist.trace.participation.size    # stalenesses occurred
+            thetas.append(np.asarray(gp["w"]))
+        assert not np.array_equal(thetas[0], thetas[1])
+
+
+# --- comm_cost satellite ----------------------------------------------------------
+
+class TestCNNParamCount:
+    def test_n_params_matches_init_and_pin(self):
+        from repro.models import cnn
+
+        params = cnn.init(jax.random.key(0))
+        n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        assert cnn.CNNConfig().n_params() == n == 582_026
+
+    def test_n_params_tracks_config(self):
+        from repro.models import cnn
+
+        cfg = cnn.CNNConfig(c1=8, c2=16, fc=32)
+        params = cnn.init(jax.random.key(0), cfg)
+        n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        assert cfg.n_params() == n

@@ -196,11 +196,17 @@ def test_history_compat_view():
 
 def test_unknown_engine_error(tiny_fl):
     cnn, cd, xte, yte = tiny_fl
+    # eager: a bad engine name fails at construction, listing the options
     cfg = FederationConfig(n_clients=5, n_coalitions=2, rounds=2,
                            engine="warp")
-    fed = Federation(cnn.loss_fn, lambda p: 0.0, cfg)
-    with pytest.raises(KeyError, match="unknown engine"):
-        fed.run(cnn.init(jax.random.key(0)), cd, jax.random.key(1))
+    with pytest.raises(ValueError, match="unknown engine 'warp'.*scan"):
+        Federation(cnn.loss_fn, lambda p: 0.0, cfg)
+    # ...and a bad run-time override still fails at dispatch
+    fed = Federation(cnn.loss_fn, lambda p: 0.0,
+                     FederationConfig(n_clients=5, n_coalitions=2, rounds=2))
+    with pytest.raises(ValueError, match="unknown engine"):
+        fed.run(cnn.init(jax.random.key(0)), cd, jax.random.key(1),
+                engine="warp")
 
 
 # --- backend registry through the round ------------------------------------------

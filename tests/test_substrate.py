@@ -79,6 +79,20 @@ class TestPartition:
 
         assert skew(h_lo) > skew(h_hi)
 
+    def test_equalize_pad_path(self):
+        """Short client index lists are padded by resampling (the rare
+        extreme-Dirichlet branch): exact n_local shape, pad drawn only from
+        the client's own indices, and deterministic under a fixed rng."""
+        parts = [np.arange(10), np.array([100, 101, 102])]   # second is short
+        out = partition._equalize(parts, 10, np.random.default_rng(7))
+        assert out.shape == (2, 10)
+        np.testing.assert_array_equal(out[0], np.arange(10))
+        assert set(out[1][:3]) == {100, 101, 102}            # originals kept
+        assert set(out[1]) <= {100, 101, 102}                # pad resamples
+        out2 = partition._equalize(
+            [p.copy() for p in parts], 10, np.random.default_rng(7))
+        np.testing.assert_array_equal(out, out2)
+
     @given(st.integers(2, 12), st.sampled_from(["iid", "dirichlet", "shard"]))
     @settings(max_examples=10, deadline=None)
     def test_property_partition_total(self, n_clients, regime):
