@@ -3,36 +3,84 @@ microbenchmarks.  Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run            # quick suite (CPU)
   PYTHONPATH=src python -m benchmarks.run --full     # paper-scale figures
+  PYTHONPATH=src python -m benchmarks.run --only coalition_round --json
+                                     # CI perf tier -> BENCH_round.json
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+#: structured results (filled as benches run; dumped by --json)
+_JSON: dict = {}
+
 
 def _timeit(fn, *args, reps: int = 5) -> float:
-    fn(*args)                                    # compile
-    jax.block_until_ready(fn(*args))
+    """us/call, compile excluded.  Every rep blocks: with async dispatch a
+    loop of un-synced calls only measures enqueue time and lets queued reps
+    under-report (the old bug — one sync at the end timed reps-1 dispatches
+    plus a single execution)."""
+    jax.block_until_ready(fn(*args))             # compile
     t0 = time.perf_counter()
     for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
+        jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def bench_coalition_round() -> tuple[float, float]:
-    """Algorithm 1 server step at the paper's scale (N=10, D=582k)."""
-    from repro.core import coalitions
+def _coalition_round_stats(d: int, reps: int) -> dict:
+    """Composed-vs-fused Algorithm 1 server step at N=10, K=3.
 
-    w = jax.random.normal(jax.random.key(0), (10, 582_026), jnp.float32)
+    Times both paths and traces both to count full sweeps over the (N, D)
+    weight matrix (repro.core.instrument); the fused path must read W
+    exactly twice.
+    """
+    from repro.core import coalitions, instrument
+
+    w = jax.random.normal(jax.random.key(0), (10, d), jnp.float32)
     state = coalitions.init_centers(jax.random.key(1), w, 3)
-    fn = jax.jit(lambda w_, s: coalitions.run_round(w_, s).theta)
-    us = _timeit(fn, w, state)
-    return us, float(jnp.sum(fn(w, state)))
+    composed = jax.jit(
+        lambda w_, s: coalitions.run_round(w_, s, fused=False).theta)
+    fused = jax.jit(
+        lambda w_, s: coalitions.run_round(w_, s, fused=True).theta)
+    err = float(jnp.max(jnp.abs(composed(w, state) - fused(w, state))))
+    us_c = _timeit(composed, w, state, reps=reps)
+    us_f = _timeit(fused, w, state, reps=reps)
+    passes = {}
+    for name, fn in (("composed", composed), ("fused", fused)):
+        with instrument.count_w_passes() as p:
+            jax.make_jaxpr(lambda w_, s: coalitions.run_round(
+                w_, s, fused=(name == "fused")).theta)(w, state)
+        passes[name] = p()
+    return {"n": 10, "d": d, "k": 3,
+            "composed_us": us_c, "fused_us": us_f,
+            "speedup": us_c / us_f,
+            "composed_w_passes": passes["composed"],
+            "fused_w_passes": passes["fused"],
+            "max_abs_err": err}
+
+
+def bench_coalition_round() -> tuple[float, float]:
+    """Fused Algorithm 1 server step at the paper's scale (N=10, D=582k);
+    derived = speedup of the two-pass fused round over the composed path."""
+    r = _coalition_round_stats(d=582_026, reps=5)
+    _JSON.setdefault("coalition_round", {})["d582k"] = r
+    return r["fused_us"], r["speedup"]
+
+
+def bench_coalition_round_d8m() -> tuple[float, float]:
+    """Framework-scale round (D=8M, HBM-bandwidth-bound regime); derived =
+    passes over W of the fused path (must be exactly 2)."""
+    r = _coalition_round_stats(d=8_000_000, reps=3)
+    _JSON.setdefault("coalition_round", {})["d8m"] = r
+    assert r["fused_w_passes"] == 2, \
+        f"two-pass contract broken: fused round reads W {r['fused_w_passes']}x"
+    return r["fused_us"], float(r["fused_w_passes"])
 
 
 def bench_pairwise_kernel() -> tuple[float, float]:
@@ -192,10 +240,17 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale figure runs (slow)")
     ap.add_argument("--skip-figs", action="store_true")
+    ap.add_argument("--only", default=None, metavar="SUBSTR",
+                    help="run only benches whose name contains SUBSTR")
+    ap.add_argument("--json", nargs="?", const="BENCH_round.json",
+                    default=None, metavar="PATH",
+                    help="write structured results (default BENCH_round.json)"
+                         " so the perf trajectory accrues per PR")
     args = ap.parse_args()
 
     benches = [
         ("coalition_round_n10_d582k", bench_coalition_round),
+        ("coalition_round_n10_d8m", bench_coalition_round_d8m),
         ("kernel_pairwise_dist", bench_pairwise_kernel),
         ("kernel_segment_sum", bench_segment_sum),
         ("kernel_flash_attention", bench_flash_attention),
@@ -212,13 +267,27 @@ def main() -> None:
             ("fig4_shard_gap", lambda: bench_fig("shard", args.full)),
         ]
 
+    if args.only is not None:
+        benches = [(n, f) for n, f in benches if args.only in n]
+
     print("name,us_per_call,derived")
+    failures = []
     for name, fn in benches:
         try:
             us, derived = fn()
             print(f"{name},{us:.1f},{derived:.6f}", flush=True)
         except Exception as e:  # pragma: no cover
+            failures.append(name)
             print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)
+
+    if args.json is not None:
+        _JSON["meta"] = {"backend": jax.default_backend(),
+                         "jax": jax.__version__,
+                         "platform": platform.platform(),
+                         "failures": failures}
+        with open(args.json, "w") as f:
+            json.dump(_JSON, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", flush=True)
 
 
 if __name__ == "__main__":

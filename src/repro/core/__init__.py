@@ -6,12 +6,16 @@ Public API:
   coalitions.init_centers / run_round            (Algorithm 1)
   aggregation.fedavg / trimmed_mean / comm_*     (flat rules + comm accounting)
   backends.register_backend / get_backend        (xla | dot | pallas primitives)
+  fused.fused_round                              (two-pass streaming round)
+  instrument.count_w_passes                      (HBM pass accounting)
   strategies.register_strategy / make_strategy   (pluggable aggregation rules)
   client.client_update                           (local phase)
   server.Federation / run_federation             (scanned round engine)
 """
 from repro.core import (aggregation, backends, barycenter, client, coalitions,
-                        distance, pytree, server, strategies)
+                        distance, fused, instrument, pytree, server,
+                        strategies)
 
 __all__ = ["aggregation", "backends", "barycenter", "client", "coalitions",
-           "distance", "pytree", "server", "strategies"]
+           "distance", "fused", "instrument", "pytree", "server",
+           "strategies"]

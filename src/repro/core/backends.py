@@ -1,10 +1,19 @@
 """Compute-backend registry for the distance/barycenter primitives.
 
-The coalition engine needs exactly three array primitives:
+The coalition engine needs three base array primitives:
 
   ``pairwise_sq_dists(w) -> (N, N)``        — §III.A distance matrix
   ``sq_dists_to_points(w, p) -> (N, K)``    — assignment + medoid distances
   ``segment_sum(onehot, w) -> (K, D)``      — §III.B barycenter reduction
+
+plus one optional fused primitive:
+
+  ``fused_round(w, center_idx, *, client_weights=None) -> FusedStats`` —
+  Algorithm 1's whole server step (Steps II-IV) as a two-pass streaming
+  program over the (N, D) weight matrix (see :mod:`repro.core.fused`).
+  Backends that omit it (``None``) are served by the generic composition
+  built from the three base primitives, so pre-existing third-party
+  backends keep working unchanged.
 
 A :class:`Backend` bundles one implementation of each.  Implementations
 register themselves under a name (``'xla'``, ``'dot'``, ``'pallas'``) and the
@@ -18,13 +27,16 @@ missing TPU toolchain never breaks CPU-only use.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import TYPE_CHECKING, Callable, NamedTuple
 
 import jax
 
+if TYPE_CHECKING:   # runtime import would cycle (fused.py imports backends)
+    from repro.core.fused import FusedStats
+
 
 class Backend(NamedTuple):
-    """One implementation of the three coalition-engine primitives.
+    """One implementation of the coalition-engine primitives.
 
     Each callable may accept (and ignore) extra keyword tuning knobs such as
     ``chunk=`` so callers can pass hints without knowing the implementation.
@@ -34,6 +46,9 @@ class Backend(NamedTuple):
     pairwise_sq_dists: Callable[..., jax.Array]
     sq_dists_to_points: Callable[..., jax.Array]
     segment_sum: Callable[..., jax.Array]
+    #: optional two-pass fused round (repro.core.fused.FusedStats); None =
+    #: serve coalition rounds through the generic composition instead.
+    fused_round: Callable[..., "FusedStats"] | None = None
 
 
 _BACKENDS: dict[str, Backend] = {}
@@ -63,25 +78,35 @@ def available_backends() -> tuple[str, ...]:
 
 def _register_pallas() -> None:
     """'pallas' resolves the kernel wrappers lazily, at first call."""
+    from repro.core import instrument
 
     def _pairwise(w, **kw):
         from repro.kernels import ops as kops
 
+        instrument.count_w_pass()
         return kops.pairwise_sq_dists(w)
 
     def _to_points(w, p, **kw):
         from repro.kernels import ops as kops
 
+        instrument.count_w_pass()
         return kops.sq_dists_to_points(w, p)
 
     def _segment_sum(onehot, w, **kw):
         from repro.kernels import ops as kops
 
+        instrument.count_w_pass()
         return kops.segment_sum(onehot, w)
+
+    def _fused_round(w, center_idx, **kw):
+        from repro.core import fused as fz
+
+        return fz.fused_round_pallas(w, center_idx, **kw)
 
     register_backend(Backend(name="pallas", pairwise_sq_dists=_pairwise,
                              sq_dists_to_points=_to_points,
-                             segment_sum=_segment_sum))
+                             segment_sum=_segment_sum,
+                             fused_round=_fused_round))
 
 
 _register_pallas()

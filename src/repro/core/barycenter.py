@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.core import backends as bk
 from repro.core import distance
+from repro.core import fused as fz
 
 
 def coalition_onehot(assignment: jax.Array, k: int) -> jax.Array:
@@ -59,23 +60,22 @@ def barycenters(w: jax.Array, assignment: jax.Array, k: int, *,
 
 
 def medoids(w: jax.Array, bary: jax.Array, assignment: jax.Array, *,
-            backend: str | bk.Backend = "xla") -> jax.Array:
+            backend: str | bk.Backend = "xla",
+            client_weights: jax.Array | None = None) -> jax.Array:
     """Paper Step III center update: new center v_j = argmin_{u_i} d(ω_i, b_j).
 
     Restricted to members of coalition j (the algorithm reassigns a *user* as
     the center; a user from another coalition would break the partition).
+    ``client_weights``: optional (N,) effective masses — zero-mass clients
+    (participation mask 0 under ``semi_async``) are excluded from the argmin
+    so a client that contributed nothing to the barycenter is never elected
+    center; an all-zero-mass coalition falls back to the global argmin.
 
     Returns:
       (K,) int32 client indices of the new coalition centers.
     """
-    k = bary.shape[0]
     d2 = distance.sq_dists_to_points(w, bary, backend=backend)   # (N, K)
-    member = assignment[:, None] == jnp.arange(k)[None, :]       # (N, K)
-    masked = jnp.where(member, d2, jnp.inf)
-    # Empty coalition: fall back to global argmin so the index stays valid.
-    any_member = jnp.any(member, axis=0)
-    idx = jnp.where(any_member, jnp.argmin(masked, axis=0), jnp.argmin(d2, axis=0))
-    return idx.astype(jnp.int32)
+    return fz.medoid_from_d2(d2, assignment, client_weights)
 
 
 def global_aggregate(bary: jax.Array) -> jax.Array:

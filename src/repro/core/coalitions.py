@@ -13,6 +13,11 @@ matrix:
 
 ``CoalitionState`` carries the center indices across rounds, mirroring the
 paper's v_j^r recurrence.
+
+Steps II-IV default to the backend's two-pass ``fused_round`` primitive
+(:mod:`repro.core.fused`) — two streaming sweeps over the (N, D) weight
+matrix instead of five W-sized touches; ``run_round(..., fused=False)``
+keeps the composed reference path.
 """
 from __future__ import annotations
 
@@ -24,6 +29,7 @@ import jax.numpy as jnp
 from repro.core import backends as bk
 from repro.core import barycenter as bary_mod
 from repro.core import distance
+from repro.core import fused as fz
 
 
 class CoalitionState(NamedTuple):
@@ -87,30 +93,43 @@ def assign(w: jax.Array, center_idx: jax.Array, *,
     """
     centers = w[center_idx]                               # (K, D)
     d2 = distance.sq_dists_to_points(w, centers, backend=backend)  # (N, K)
-    a = jnp.argmin(d2, axis=1).astype(jnp.int32)
-    # pin centers to their own coalition id
-    k = center_idx.shape[0]
-    n = w.shape[0]
-    pin = jnp.full((n,), -1, jnp.int32).at[center_idx].set(jnp.arange(k, dtype=jnp.int32))
-    return jnp.where(pin >= 0, pin, a)
+    return fz.pin_assignment(d2, center_idx)
 
 
 def run_round(w: jax.Array, state: CoalitionState, *,
               backend: str | bk.Backend = "xla",
-              client_weights: jax.Array | None = None) -> CoalitionRound:
+              client_weights: jax.Array | None = None,
+              fused: bool = True) -> CoalitionRound:
     """One full Algorithm-1 server round over fresh client weights ``w``.
 
     ``client_weights``: optional (N,) importances for the §III.B weighted-
-    barycenter extension (uniform = the paper's Algorithm 1).
+    barycenter extension (uniform = the paper's Algorithm 1).  Zero-weight
+    clients are excluded from the medoid election (they contributed nothing
+    to the barycenter they would anchor).
+
+    ``fused=True`` (default) runs Steps II-IV through the backend's two-pass
+    ``fused_round`` primitive — two sweeps over the (N, D) matrix instead of
+    five W-sized touches; ``fused=False`` keeps the composed reference
+    (assign → barycenters → medoids → aggregate as separate primitive calls,
+    bit-for-bit equal on the xla backend — tested in tests/test_fused_round.py).
     """
     backend = bk.get_backend(backend)      # resolve once for the whole round
     k = state.center_idx.shape[0]
+    if fused:
+        r = fz.fused_round(w, state.center_idx, backend=backend,
+                           client_weights=client_weights)
+        return CoalitionRound(
+            assignment=r.assignment, barycenters=r.barycenters,
+            counts=r.counts, new_center_idx=r.new_center_idx, theta=r.theta,
+            state=CoalitionState(center_idx=r.new_center_idx,
+                                 round=state.round + 1))
     assignment = assign(w, state.center_idx, backend=backend)
     prev_centers = w[state.center_idx].astype(jnp.float32)
     b, counts = bary_mod.barycenters(w, assignment, k, fallback=prev_centers,
                                      backend=backend,
                                      client_weights=client_weights)
-    new_centers = bary_mod.medoids(w, b, assignment, backend=backend)
+    new_centers = bary_mod.medoids(w, b, assignment, backend=backend,
+                                   client_weights=client_weights)
     theta = bary_mod.global_aggregate(b)
     return CoalitionRound(
         assignment=assignment,

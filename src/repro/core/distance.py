@@ -22,10 +22,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import backends as bk
+from repro.core import fused as fz
+from repro.core import instrument
 
 
 def _pairwise_sq_xla(w: jax.Array, chunk: int) -> jax.Array:
     """Chunked Σ_d (w[i,d]-w[j,d])^2 -> (N, N)."""
+    instrument.count_w_pass()
     n, d = w.shape
     pad = (-d) % chunk
     if pad:
@@ -49,6 +52,7 @@ def _pairwise_sq_dot(w: jax.Array) -> jax.Array:
     contraction over D becomes local partial Grams + an all-reduce of the tiny
     (N, N) matrix instead of an all-gather of the full weight matrix (see
     EXPERIMENTS.md §Perf, FL round)."""
+    instrument.count_w_pass()
     wf = w.astype(jnp.float32)
     gram = wf @ wf.T
     sq = jnp.sum(wf * wf, axis=1)
@@ -58,6 +62,7 @@ def _pairwise_sq_dot(w: jax.Array) -> jax.Array:
 
 
 def _to_points_sq_xla(w: jax.Array, points: jax.Array, chunk: int) -> jax.Array:
+    instrument.count_w_pass()
     n, d = w.shape
     k = points.shape[0]
     pad = (-d) % chunk
@@ -78,6 +83,7 @@ def _to_points_sq_xla(w: jax.Array, points: jax.Array, chunk: int) -> jax.Array:
 
 
 def _to_points_sq_dot(w: jax.Array, points: jax.Array) -> jax.Array:
+    instrument.count_w_pass()
     wf, pf = w.astype(jnp.float32), points.astype(jnp.float32)
     cross = wf @ pf.T
     d2 = (jnp.sum(wf * wf, 1)[:, None] + jnp.sum(pf * pf, 1)[None, :]
@@ -87,6 +93,7 @@ def _to_points_sq_dot(w: jax.Array, points: jax.Array) -> jax.Array:
 
 def _segment_sum_matmul(onehot: jax.Array, w: jax.Array) -> jax.Array:
     """(K, N) one-hot × (N, D) weights — MXU does the segment reduction."""
+    instrument.count_w_pass()
     return onehot @ w.astype(jnp.float32)
 
 
@@ -97,6 +104,7 @@ bk.register_backend(bk.Backend(
     sq_dists_to_points=lambda w, p, chunk=65536, **kw: _to_points_sq_xla(
         w, p, chunk),
     segment_sum=lambda onehot, w, **kw: _segment_sum_matmul(onehot, w),
+    fused_round=fz.fused_round_xla,
 ))
 
 bk.register_backend(bk.Backend(
@@ -104,6 +112,7 @@ bk.register_backend(bk.Backend(
     pairwise_sq_dists=lambda w, **kw: _pairwise_sq_dot(w),
     sq_dists_to_points=lambda w, p, **kw: _to_points_sq_dot(w, p),
     segment_sum=lambda onehot, w, **kw: _segment_sum_matmul(onehot, w),
+    fused_round=fz.fused_round_dot,
 ))
 
 

@@ -1,0 +1,37 @@
+"""Trace-time HBM-traffic accounting for the coalition round.
+
+The round's first-order cost at framework scale (D >= 1e9) is how many times
+the (N, D) client weight matrix streams out of HBM.  Each streaming
+composition in :mod:`repro.core.distance` / :mod:`repro.core.fused` calls
+:func:`count_w_pass` once per full sweep over W **at trace time**, so tracing
+a round (``jax.make_jaxpr``) counts exactly the passes the compiled program
+will execute — no runtime hooks, no profiler dependency.
+
+Only full (N, D) sweeps are counted.  Small-operand traffic (the (K, D)
+center gather and barycenter re-reads of the composed path) is real but
+K/N-sized; the benchmark JSON reports it qualitatively instead.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Iterator
+
+_W_PASSES = 0
+
+
+def count_w_pass(n: int = 1) -> None:
+    """Record ``n`` full sweeps over the (N, D) weight matrix."""
+    global _W_PASSES
+    _W_PASSES += n
+
+
+@contextlib.contextmanager
+def count_w_passes() -> Iterator[Callable[[], int]]:
+    """Count sweeps traced inside the block::
+
+        with instrument.count_w_passes() as passes:
+            jax.make_jaxpr(round_fn)(w, state)
+        assert passes() == 2
+    """
+    start = _W_PASSES
+    yield lambda: _W_PASSES - start

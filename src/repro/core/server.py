@@ -59,7 +59,15 @@ from repro.core.strategies import RoundMetrics, Strategy
 
 PyTree = Any
 
-BYTES_PER_PARAM = 4        # float32 models on the wire
+
+def bytes_per_param(w: jax.Array) -> int:
+    """On-wire bytes per parameter, derived from the weight matrix dtype.
+
+    The comm accounting must track whatever actually crosses the wire — a
+    bf16 or fp8 deployment halves/quarters the bytes, and a pinned ``4``
+    would silently misreport it.
+    """
+    return jnp.dtype(w.dtype).itemsize
 
 
 class FederationConfig(NamedTuple):
@@ -219,10 +227,25 @@ class Federation:
     # -- engines -------------------------------------------------------------------
     # The jitted programs are memoized per Federation instance, so repeated
     # .run() calls (benchmark reps, sweeps over seeds) compile exactly once.
+    #
+    # Donation contract: each engine is a jitted prologue (``_round0_jit``,
+    # which owns the user's ``init_params`` and never donates them) followed
+    # by the scanned/looped main program, whose round-0 carry — the θ pytree,
+    # strategy state, and (semi_async) the (N, D) buffer + staleness counters
+    # — is DONATED (``donate_argnums``).  Those arrays are produced by the
+    # prologue, consumed exactly once here, and returned as outputs, so XLA
+    # updates the carried θ and the federation buffers in place instead of
+    # double-buffering D-sized arrays.  User-facing inputs to ``run()`` are
+    # never donated.
 
     @functools.cached_property
     def _scan_engine(self):
-        """(θ0, client_data, key) -> (θ_final, Trace): one lax.scan program."""
+        """(key, θ, state, round-0 metrics, data) -> (θ_final, state, Trace).
+
+        All R-1 remaining rounds (eval included) as ONE lax.scan program; the
+        θ pytree and strategy state are donated and returned, so the carry
+        updates in place.
+        """
 
         def step_with(data):
             def step(carry, _):
@@ -237,10 +260,8 @@ class Federation:
 
             return step
 
-        def engine(params, client_data, key):
-            key, gp, state, _, loss0, acc0, m0 = self._round0(
-                params, client_data, key)
-            (_, gp, _), (loss, acc, m) = jax.lax.scan(
+        def engine(key, gp, state, loss0, acc0, m0, client_data):
+            (_, gp, state), (loss, acc, m) = jax.lax.scan(
                 step_with(client_data), (key, gp, state), None,
                 length=self.cfg.rounds - 1)
             trace = Trace(
@@ -248,13 +269,16 @@ class Federation:
                 acc=jnp.concatenate([acc0[None], acc]),
                 assignment=jnp.concatenate([m0.assignment[None], m.assignment]),
                 counts=jnp.concatenate([m0.counts[None], m.counts]))
-            return gp, trace
+            return gp, state, trace
 
-        return jax.jit(engine)
+        return jax.jit(engine, donate_argnums=(1, 2))
 
     def _run_scan(self, init_params, client_data, key):
-        """All R rounds (eval included) as ONE jitted lax.scan program."""
-        gp, trace = self._scan_engine(init_params, client_data, key)
+        """All R rounds (eval included) as one jitted prologue + scan."""
+        key, gp, state, _, loss0, acc0, m0 = self._round0_jit(
+            init_params, client_data, key)
+        gp, _, trace = self._scan_engine(key, gp, state, loss0, acc0, m0,
+                                         client_data)
         return gp, History(trace=jax.device_get(trace))
 
     @functools.cached_property
@@ -265,7 +289,10 @@ class Federation:
             return (pytree.unflatten(res.theta, params), res.state,
                     jnp.mean(losses), res.metrics)
 
-        return jax.jit(round_fn)
+        # The host loop rebinds (gp, state) to this round's outputs, so the
+        # previous round's buffers are dead on entry — donate them and θ
+        # updates in place even in the debug engine.
+        return jax.jit(round_fn, donate_argnums=(0, 1))
 
     @functools.cached_property
     def _round0_jit(self):
@@ -342,20 +369,16 @@ class Federation:
                 scale = cfg.n_clients / jnp.maximum(jnp.sum(m), 1.0)
                 loss = jnp.mean(losses * (m * scale))
                 sim_t, wan, edge = sim_mod.round_stats(
-                    mask, dev_time, buf.shape[1] * BYTES_PER_PARAM,
+                    mask, dev_time, buf.shape[1] * bytes_per_param(buf),
                     strategy.n_groups, strategy.hierarchical)
                 return ((key, gp, res.state, buf, tau, astate),
                         (loss, acc, res.metrics, m, sim_t, wan, edge))
 
             return step
 
-        def engine(params, client_data, key):
-            # Fork the availability stream off the run key WITHOUT consuming
-            # it, so the client-update key chain is identical to 'scan'.
-            akey = jax.random.fold_in(key, sim_mod.AVAILABILITY_STREAM)
-            key, gp, state, w0, loss0, acc0, m0 = self._round0(
-                params, client_data, key)
-            model_bytes = w0.shape[1] * BYTES_PER_PARAM
+        def engine(key, akey, gp, state, buf, tau, loss0, acc0, m0,
+                   client_data):
+            model_bytes = buf.shape[1] * bytes_per_param(buf)
             dev_time = sim_mod.device_round_time(fleet, model_bytes,
                                                  scfg.local_work)
             astate = sim_mod.init_availability(akey, fleet,
@@ -364,9 +387,9 @@ class Federation:
             t0, wan0, edge0 = sim_mod.round_stats(
                 mask0, dev_time, model_bytes, strategy.n_groups,
                 strategy.hierarchical)
-            tau0 = jnp.zeros((cfg.n_clients,), jnp.int32)
-            carry0 = (key, gp, state, w0, tau0, astate)
-            (_, gp, *_), (loss, acc, m, pmask, sim_t, wan, edge) = \
+            carry0 = (key, gp, state, buf, tau, astate)
+            (_, gp, state, buf, tau, _), \
+                (loss, acc, m, pmask, sim_t, wan, edge) = \
                 jax.lax.scan(step_with(client_data, dev_time), carry0, None,
                              length=cfg.rounds - 1)
             trace = Trace(
@@ -379,13 +402,27 @@ class Federation:
                 edge_bytes=jnp.concatenate([edge0[None], edge]),
                 participation=jnp.concatenate(
                     [mask0.astype(jnp.float32)[None], pmask]))
-            return gp, trace
+            # The final substrate carry is returned (and discarded by the
+            # caller) so every donated input aliases an output buffer.
+            return gp, trace, (state, buf, tau)
 
-        return jax.jit(engine)
+        return jax.jit(engine, donate_argnums=(2, 3, 4, 5))
 
     def _run_semi_async(self, init_params, client_data, key):
-        """Fleet-simulated federation as ONE jitted lax.scan program."""
-        gp, trace = self._semi_async_engine(init_params, client_data, key)
+        """Fleet-simulated federation: jitted census prologue + one scan.
+
+        The (N, D) staleness buffer seeded by round 0 and the carried θ are
+        donated into the scan program — they update in place instead of
+        double-buffering two D-sized arrays per round.
+        """
+        # Fork the availability stream off the run key WITHOUT consuming
+        # it, so the client-update key chain is identical to 'scan'.
+        akey = jax.random.fold_in(key, sim_mod.AVAILABILITY_STREAM)
+        key, gp, state, w0, loss0, acc0, m0 = self._round0_jit(
+            init_params, client_data, key)
+        tau0 = jnp.zeros((self.cfg.n_clients,), jnp.int32)
+        gp, trace, _ = self._semi_async_engine(
+            key, akey, gp, state, w0, tau0, loss0, acc0, m0, client_data)
         return gp, History(trace=jax.device_get(trace))
 
     _ENGINES = {"scan": _run_scan, "python": _run_python,

@@ -219,6 +219,10 @@ class CoalitionStrategy(Strategy):
     backend: bk.Backend = dataclasses.field(
         default_factory=lambda: bk.get_backend("xla"))
     client_weights: jax.Array | None = None
+    #: route the round through the backend's two-pass ``fused_round``
+    #: primitive (two sweeps over the (N, D) matrix instead of five W-sized
+    #: touches); False keeps the composed reference path for debugging.
+    fused: bool = True
 
     hierarchical: ClassVar[bool] = True
 
@@ -230,12 +234,13 @@ class CoalitionStrategy(Strategy):
         # present clients enter at full mass, late (buffered) updates at
         # their staleness-decayed mass, excluded clients at 0 — coalition
         # formation itself still places every buffered row, but barycenters
-        # (and hence θ) only aggregate the weighted present cohort.
+        # (and hence θ) only aggregate the weighted present cohort, and
+        # zero-mass clients cannot be elected medoid centers.
         cw = self.client_weights
         if mask is not None:
             cw = mask if cw is None else cw * mask
         return co.run_round(w, state, backend=self.backend,
-                            client_weights=cw)
+                            client_weights=cw, fused=self.fused)
 
     def round(self, w, state, mask=None):
         r = self._coalition_round(w, state, mask)
@@ -293,17 +298,19 @@ def _make_fedavg_trimmed(*, n_clients, n_coalitions=1, backend="xla",
 
 @register_strategy("coalition")
 def _make_coalition(*, n_clients, n_coalitions=3, backend="xla",
-                    client_weights=None, **_) -> Strategy:
+                    client_weights=None, fused=True, **_) -> Strategy:
     return CoalitionStrategy(n_clients=n_clients, n_groups=n_coalitions,
                              backend=bk.get_backend(backend),
-                             client_weights=client_weights)
+                             client_weights=client_weights, fused=fused)
 
 
 @register_strategy("coalition_topk")
 def _make_coalition_topk(*, n_clients, n_coalitions=3, backend="xla",
-                         client_weights=None, top_m=None, **_) -> Strategy:
+                         client_weights=None, top_m=None, fused=True,
+                         **_) -> Strategy:
     if top_m is None:
         top_m = max(1, n_coalitions - 1)
     return TopKCoalitionStrategy(n_clients=n_clients, n_groups=n_coalitions,
                                  backend=bk.get_backend(backend),
-                                 client_weights=client_weights, top_m=top_m)
+                                 client_weights=client_weights, top_m=top_m,
+                                 fused=fused)

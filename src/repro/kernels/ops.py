@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_round as _fr
 from repro.kernels import pairwise_dist as _pd
 from repro.kernels import ref as _ref
 from repro.kernels import segment_mean as _sm
@@ -33,6 +34,17 @@ def sq_dists_to_points(w: jax.Array, p: jax.Array, *, block_d: int = 16384) -> j
 
 def segment_sum(onehot: jax.Array, w: jax.Array, *, block_d: int = 16384) -> jax.Array:
     return _sm.segment_sum(onehot, w, block_d=block_d, interpret=_interpret())
+
+
+def center_sq_dists(w: jax.Array, conehot: jax.Array, *,
+                    block_d: int = 16384) -> jax.Array:
+    return _fr.center_sq_dists(w, conehot, block_d=block_d,
+                               interpret=_interpret())
+
+
+def fused_coalition_stats(w: jax.Array, m: jax.Array, *, block_d: int = 16384):
+    return _fr.fused_coalition_stats(w, m, block_d=block_d,
+                                     interpret=_interpret())
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))

@@ -30,6 +30,20 @@ def segment_sum(onehot: jax.Array, w: jax.Array) -> jax.Array:
     return onehot.astype(jnp.float32) @ w.astype(jnp.float32)
 
 
+def center_sq_dists(w: jax.Array, conehot: jax.Array) -> jax.Array:
+    """Fused-round pass 1: (N, D), (K, N) center one-hot -> (N, K) sq dists."""
+    centers = conehot.astype(jnp.float32) @ w.astype(jnp.float32)
+    return sq_dists_to_points(w, centers)
+
+
+def fused_coalition_stats(w: jax.Array, m: jax.Array,
+                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused-round pass 2: barycenters b = m @ w, θ = mean(b), medoid d²."""
+    b = m.astype(jnp.float32) @ w.astype(jnp.float32)
+    theta = jnp.mean(b, axis=0)
+    return b, theta, sq_dists_to_points(w, b)
+
+
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               causal: bool = True, window: int | None = None,
               scale: float | None = None) -> jax.Array:

@@ -1,0 +1,255 @@
+"""Fused-vs-composed parity for the two-pass coalition round.
+
+The composed path (assign -> barycenters -> medoids -> aggregate as separate
+primitive calls) is the correctness oracle; ``fused_round`` must agree on
+every registered backend — bit-for-bit on xla (same chunk partition, same
+association order), <=1e-5 relative elsewhere — across the uniform, weighted,
+masked, and empty-coalition paths, plus the pass-count contract and the
+semi_async/scan engine regression through the fused path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backends, barycenter, coalitions, instrument
+
+BACKENDS = ["xla", "dot", "pallas"]
+
+
+def _rand_w(n, d, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, d)).astype(np.float32) * scale)
+
+
+def _state(center_idx):
+    return coalitions.CoalitionState(
+        center_idx=jnp.asarray(center_idx, jnp.int32), round=jnp.int32(0))
+
+
+def _assert_rounds_match(rc, rf, *, bitwise=False):
+    """Composed round ``rc`` vs fused round ``rf``."""
+    np.testing.assert_array_equal(np.asarray(rc.assignment),
+                                  np.asarray(rf.assignment))
+    np.testing.assert_array_equal(np.asarray(rc.new_center_idx),
+                                  np.asarray(rf.new_center_idx))
+    if bitwise:
+        for field in ("counts", "barycenters", "theta"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(rc, field)), np.asarray(getattr(rf, field)),
+                err_msg=field)
+        return
+    np.testing.assert_allclose(np.asarray(rc.counts), np.asarray(rf.counts),
+                               rtol=1e-6)
+    scale = float(np.abs(np.asarray(rc.barycenters)).max()) + 1e-12
+    np.testing.assert_allclose(np.asarray(rf.barycenters) / scale,
+                               np.asarray(rc.barycenters) / scale, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rf.theta) / scale,
+                               np.asarray(rc.theta) / scale, atol=1e-5)
+
+
+def _both(w, state, backend, client_weights=None):
+    rc = coalitions.run_round(w, state, backend=backend,
+                              client_weights=client_weights, fused=False)
+    rf = coalitions.run_round(w, state, backend=backend,
+                              client_weights=client_weights, fused=True)
+    return rc, rf
+
+
+class TestFusedParity:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_uniform(self, backend):
+        w = _rand_w(10, 70_001, seed=1)          # multi-chunk pallas, xla tail
+        state = coalitions.init_centers(jax.random.key(0), w, 3)
+        rc, rf = _both(w, state, backend)
+        _assert_rounds_match(rc, rf, bitwise=(backend == "xla"))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_client_weights(self, backend):
+        w = _rand_w(8, 5_000, seed=2)
+        state = coalitions.init_centers(jax.random.key(1), w, 3)
+        cw = jnp.asarray(np.random.default_rng(3).random(8).astype(np.float32)
+                         + 0.25)
+        rc, rf = _both(w, state, backend, client_weights=cw)
+        _assert_rounds_match(rc, rf, bitwise=(backend == "xla"))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_masked(self, backend):
+        """Binary participation mask (the semi_async contract): absent
+        clients carry zero mass and must not be electable medoids."""
+        w = _rand_w(9, 3_001, seed=4)
+        state = coalitions.init_centers(jax.random.key(2), w, 3)
+        mask = jnp.asarray(
+            np.array([1, 0, 1, 1, 0, 1, 1, 1, 0], np.float32))
+        rc, rf = _both(w, state, backend, client_weights=mask)
+        _assert_rounds_match(rc, rf, bitwise=(backend == "xla"))
+        for j, c in enumerate(np.asarray(rf.new_center_idx)):
+            if np.asarray(rf.counts)[j] > 0:
+                assert mask[int(c)] > 0, "zero-mass client elected center"
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_empty_coalition(self, backend):
+        """A coalition whose whole membership (center included) has zero mass
+        keeps the previous center's weights on both paths."""
+        rng = np.random.default_rng(5)
+        w = jnp.asarray(np.concatenate(
+            [5 + 0.1 * rng.standard_normal((5, 300)),
+             -5 + 0.1 * rng.standard_normal((5, 300))]).astype(np.float32))
+        state = _state([0, 5])
+        cw = jnp.asarray(np.r_[np.ones(5), np.zeros(5)].astype(np.float32))
+        rc, rf = _both(w, state, backend, client_weights=cw)
+        _assert_rounds_match(rc, rf, bitwise=(backend == "xla"))
+        assert float(rf.counts[1]) == 0.0
+        np.testing.assert_allclose(np.asarray(rf.barycenters)[1],
+                                   np.asarray(w)[5], rtol=1e-5)
+
+    def test_xla_bitwise_across_chunk_boundaries(self):
+        """Exact-multiple, sub-chunk, and straddling D all stay bit-for-bit."""
+        for d in (64, 4096, 4097, 8192):
+            w = _rand_w(6, d, seed=d)
+            state = coalitions.init_centers(jax.random.key(3), w, 2)
+            rc, rf = _both(w, state, "xla")
+            _assert_rounds_match(rc, rf, bitwise=True)
+
+
+class TestGenericComposition:
+    def test_backend_without_fused_round(self):
+        """A third-party backend registered with only the three base
+        primitives serves fused_round through the generic composition —
+        bit-for-bit when it wraps the xla primitives."""
+        xla = backends.get_backend("xla")
+        custom = backends.Backend(name="_no_fused",
+                                  pairwise_sq_dists=xla.pairwise_sq_dists,
+                                  sq_dists_to_points=xla.sq_dists_to_points,
+                                  segment_sum=xla.segment_sum)
+        assert custom.fused_round is None
+        backends.register_backend(custom)
+        try:
+            w = _rand_w(7, 1_000, seed=6)
+            state = coalitions.init_centers(jax.random.key(4), w, 3)
+            rc, rf = _both(w, state, "_no_fused")
+            _assert_rounds_match(rc, rf, bitwise=True)
+        finally:
+            del backends._BACKENDS["_no_fused"]
+
+
+class TestPassCounts:
+    def test_fused_reads_w_exactly_twice(self):
+        """The two-pass contract, asserted at trace time on both streaming
+        backends; the composed path pays three full sweeps (plus the (K, D)
+        gathers the counter deliberately ignores)."""
+        w = _rand_w(10, 70_001, seed=7)
+        state = coalitions.init_centers(jax.random.key(5), w, 3)
+        for backend in BACKENDS:
+            with instrument.count_w_passes() as passes:
+                jax.make_jaxpr(lambda w_, s: coalitions.run_round(
+                    w_, s, backend=backend, fused=True).theta)(w, state)
+            assert passes() == 2, backend
+        with instrument.count_w_passes() as passes:
+            jax.make_jaxpr(lambda w_, s: coalitions.run_round(
+                w_, s, fused=False).theta)(w, state)
+        assert passes() == 3
+
+
+class TestMedoidZeroMass:
+    def test_zero_mass_client_not_elected(self):
+        """Regression: a zero-mass client sitting exactly at the barycenter
+        used to win the medoid argmin; it must be excluded now."""
+        w = jnp.asarray(np.stack([np.zeros(50), np.ones(50), -np.ones(50),
+                                  10 * np.ones(50)]).astype(np.float32))
+        a = jnp.array([0, 0, 0, 1], jnp.int32)
+        cw = jnp.array([0.0, 1.0, 1.0, 1.0])
+        b, _ = barycenter.barycenters(w, a, 2, client_weights=cw)
+        med = barycenter.medoids(w, b, a, client_weights=cw)
+        assert int(med[0]) in (1, 2)          # not the zero-mass client 0
+        # without weights the old behaviour is preserved
+        med_unweighted = barycenter.medoids(w, b, a)
+        assert int(med_unweighted[0]) == 0
+
+    def test_all_zero_mass_falls_back_to_global_argmin(self):
+        from repro.core import distance
+
+        w = _rand_w(6, 40, seed=8)
+        a = jnp.array([0, 0, 0, 1, 1, 1], jnp.int32)
+        cw = jnp.array([1.0, 1.0, 1.0, 0.0, 0.0, 0.0])
+        b, _ = barycenter.barycenters(w, a, 2, client_weights=cw,
+                                      fallback=w[jnp.array([0, 3])])
+        med = barycenter.medoids(w, b, a, client_weights=cw)
+        d2 = np.asarray(distance.sq_dists_to_points(w, b))
+        assert int(med[1]) == int(np.argmin(d2[:, 1]))
+
+
+class TestEngineRegression:
+    @pytest.fixture()
+    def lsq(self):
+        """Tiny least-squares federation (mirrors tests/test_sim.py)."""
+        n_clients, n_local, dim = 6, 12, 8
+        kx, kw, kt = jax.random.split(jax.random.key(0), 3)
+        x = jax.random.normal(kx, (n_clients, n_local, dim))
+        w_true = jax.random.normal(kw, (dim,))
+        y = x @ w_true + 0.05 * jax.random.normal(kt, (n_clients, n_local))
+
+        def loss_fn(params, batch):
+            pred = batch["x"] @ params["w"]
+            return jnp.mean((pred - batch["y"]) ** 2)
+
+        xe = x.reshape(-1, dim)[:30]
+        ye = (x @ w_true).reshape(-1)[:30]
+
+        def eval_fn(params):
+            return -jnp.mean((xe @ params["w"] - ye) ** 2)
+
+        return loss_fn, eval_fn, {"x": x, "y": y}, {"w": jnp.zeros((dim,))}
+
+    def test_semi_async_ideal_reproduces_scan_through_fused_path(self, lsq):
+        """The fused round and the donated engine buffers must not perturb
+        the substrate contract: semi_async on the ideal fleet == scan,
+        bit-for-bit, with the coalition strategy on its fused default."""
+        from repro import sim
+        from repro.core.server import Federation, FederationConfig
+        from repro.core.client import ClientConfig
+
+        loss_fn, eval_fn, cd, params = lsq
+        cfg = FederationConfig(
+            n_clients=6, n_coalitions=2, rounds=6, method="coalition",
+            client=ClientConfig(epochs=1, batch_size=6, lr=0.05),
+            sim=sim.SimConfig(fleet="ideal"))
+        fed = Federation(loss_fn, eval_fn, cfg)
+        assert fed.strategy.fused
+        key = jax.random.key(11)
+        gp_s, h_s = fed.run(params, cd, key, engine="scan")
+        gp_a, h_a = fed.run(params, cd, key, engine="semi_async")
+        np.testing.assert_array_equal(np.asarray(gp_s["w"]),
+                                      np.asarray(gp_a["w"]))
+        for field in ("loss", "acc", "assignment", "counts"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(h_s.trace, field)),
+                np.asarray(getattr(h_a.trace, field)), err_msg=field)
+
+    def test_fused_and_composed_strategies_agree_end_to_end(self, lsq):
+        """Whole-federation sanity: the scan engine over the fused strategy
+        matches the composed strategy on the xla backend bit-for-bit."""
+        from repro import sim
+        from repro.core.server import Federation, FederationConfig
+        from repro.core.client import ClientConfig
+        from repro.core import strategies
+
+        loss_fn, eval_fn, cd, params = lsq
+        cfg = FederationConfig(
+            n_clients=6, n_coalitions=2, rounds=4, method="coalition",
+            client=ClientConfig(epochs=1, batch_size=6, lr=0.05),
+            sim=sim.SimConfig(fleet="ideal"))
+        key = jax.random.key(5)
+        runs = {}
+        for fused_flag in (True, False):
+            strat = strategies.make_strategy(
+                "coalition", n_clients=6, n_coalitions=2, fused=fused_flag)
+            fed = Federation(loss_fn, eval_fn, cfg, strategy=strat)
+            _, hist = fed.run(params, cd, key)
+            runs[fused_flag] = hist
+        np.testing.assert_array_equal(
+            np.asarray(runs[True].trace.acc),
+            np.asarray(runs[False].trace.acc))
+        np.testing.assert_array_equal(
+            np.asarray(runs[True].trace.assignment),
+            np.asarray(runs[False].trace.assignment))

@@ -8,6 +8,7 @@ from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels import flash_attention as fa
+from repro.kernels import fused_round as fr
 from repro.kernels import pairwise_dist as pd
 from repro.kernels import segment_mean as sm
 
@@ -54,6 +55,35 @@ def test_pairwise_property_matches_numpy(n, d, seed):
     wn = np.asarray(w)
     want = ((wn[:, None] - wn[None, :]) ** 2).sum(-1)
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# --- fused coalition round kernels -----------------------------------------------
+
+@pytest.mark.parametrize("n,k,d", [(10, 3, 1000), (7, 2, 4097), (16, 4, 8192)])
+def test_center_sq_dists_sweep(n, k, d):
+    """Pass 1: distances to centers read out of the chunk, vs the oracle."""
+    w = jax.random.normal(jax.random.key(d), (n, d), jnp.float32)
+    idx = jax.random.choice(jax.random.key(k), n, (k,), replace=False)
+    conehot = jax.nn.one_hot(idx, n, dtype=jnp.float32)
+    got = fr.center_sq_dists(w, conehot, block_d=2048, interpret=True)
+    want = ref.center_sq_dists(w, conehot)
+    scale = float(jnp.max(want)) + 1e-6
+    np.testing.assert_allclose(got / scale, want / scale, atol=5e-6)
+
+
+@pytest.mark.parametrize("n,k,d", [(10, 3, 1000), (7, 2, 4097), (16, 4, 8192)])
+def test_fused_coalition_stats_sweep(n, k, d):
+    """Pass 2: barycenter/θ tiles + medoid-distance accumulator, vs oracle."""
+    assign = jax.random.randint(jax.random.key(3), (n,), 0, k)
+    m = jax.nn.one_hot(assign, k, dtype=jnp.float32).T
+    m = m / jnp.maximum(jnp.sum(m, axis=1), 1.0)[:, None]
+    w = jax.random.normal(jax.random.key(4), (n, d), jnp.float32)
+    b, theta, d2 = fr.fused_coalition_stats(w, m, block_d=2048, interpret=True)
+    b_ref, theta_ref, d2_ref = ref.fused_coalition_stats(w, m)
+    np.testing.assert_allclose(b, b_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(theta, theta_ref, rtol=1e-5, atol=1e-5)
+    scale = float(jnp.max(d2_ref)) + 1e-6
+    np.testing.assert_allclose(d2 / scale, d2_ref / scale, atol=5e-6)
 
 
 # --- flash attention -------------------------------------------------------------
