@@ -15,6 +15,21 @@ from repro.core import aggregation
 from repro.models.cnn import CNNConfig
 
 
+def dtype_bytes(name: str) -> int:
+    """On-wire bytes per parameter for a named dtype.
+
+    Delegates to :func:`repro.core.server.bytes_per_param` — the same
+    derivation the engines' live Trace accounting uses — so the static
+    table and the simulated byte counters can never disagree about what a
+    bf16/fp8 deployment ships.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.server import bytes_per_param
+
+    return bytes_per_param(jnp.zeros((), jnp.dtype(name)))
+
+
 def table(n_clients: int = 10, k: int = 3, bytes_per_param: int = 4) -> list[dict]:
     rows = []
     entries = [("paper-cnn", CNNConfig().n_params())]
@@ -37,10 +52,14 @@ def main() -> None:
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--coalitions", type=int, default=3)
     ap.add_argument("--bytes-per-param", type=int, default=4)
+    ap.add_argument("--dtype", default=None, metavar="NAME",
+                    help="derive bytes-per-param from an on-wire dtype "
+                         "(e.g. bfloat16); overrides --bytes-per-param")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    bpp = dtype_bytes(args.dtype) if args.dtype else args.bytes_per_param
     try:
-        rows = table(args.clients, args.coalitions, args.bytes_per_param)
+        rows = table(args.clients, args.coalitions, bpp)
     except ValueError as e:                      # k > clients etc.
         ap.error(str(e))
     hdr = f"{'model':26s} {'params':>14s} {'fedavg WAN↑':>12s} {'coal WAN↑':>12s} {'savings':>8s}"

@@ -32,12 +32,14 @@ def main() -> None:
                     help="comma-separated registered strategy names "
                          f"(available: {', '.join(strategies.available_strategies())})")
     ap.add_argument("--engine", default="scan",
-                    choices=["scan", "python", "semi_async"])
+                    choices=["scan", "python", "semi_async", "event_driven"])
     ap.add_argument("--fleet", default="ideal",
-                    help="fleet profile for --engine semi_async "
+                    help="fleet profile for the substrate engines "
                          f"(available: {', '.join(sim.available_fleets())})")
     ap.add_argument("--participation", type=float, default=1.0)
     ap.add_argument("--staleness", type=float, default=0.5)
+    ap.add_argument("--energy-budget", type=float, default=float("inf"),
+                    help="per-device joules for --engine event_driven")
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--local-epochs", type=int, default=2)
     ap.add_argument("--n-train", type=int, default=8000)
@@ -62,6 +64,7 @@ def main() -> None:
             sim=sim.SimConfig(fleet=args.fleet,
                               participation=args.participation,
                               staleness_alpha=args.staleness,
+                              energy_budget=args.energy_budget,
                               seed=args.seed))
         hist = run_federation(cnn.init(jax.random.key(args.seed)),
                               cnn.loss_fn,
@@ -73,13 +76,18 @@ def main() -> None:
         if method.startswith("coalition"):
             print(f"  final coalitions: assignment={hist.assignments[-1]} "
                   f"counts={hist.counts[-1]}")
-        if hist.sim_times is not None:    # semi_async substrate accounting
+        if hist.sim_times is not None:    # IoT-substrate accounting
             print(f"  fleet={args.fleet}: "
                   f"sim_time={sum(hist.sim_times):.1f}s "
                   f"wan={sum(hist.wan_bytes) / 1e6:.1f}MB "
                   f"edge={sum(hist.edge_bytes) / 1e6:.1f}MB "
                   f"mean participants="
                   f"{sum(sum(r) for r in hist.participation) / len(hist.participation):.1f}/10")
+        if hist.event_times is not None:  # event_driven energy ledger
+            print(f"  events={len(hist.event_times)} "
+                  f"span={hist.event_times[-1]:.1f}s "
+                  f"energy={sum(hist.energy_spent[-1]):.1f}J "
+                  f"retired={sum(hist.energy_exhausted[-1])}/10")
 
     if "fedavg" in results and "coalition" in results:
         gap = (results["coalition"].test_acc[-1]

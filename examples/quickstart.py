@@ -85,3 +85,30 @@ print("sim wall-clock (s):", [round(t, 2) for t in hist.sim_times])
 print("WAN kB/round:      ", [round(b / 1e3, 2) for b in hist.wan_bytes])
 print("edge kB/round:     ", [round(b / 1e3, 2) for b in hist.edge_bytes])
 print("train loss:        ", [round(l, 3) for l in hist.train_loss])
+
+# --- continuous time: the event_driven engine with energy budgets ----------------
+# No round barrier at all: devices report whenever their own
+# download+compute+upload cycle completes, simulated time advances
+# event-by-event, staleness is measured in seconds, and every cycle
+# depletes a per-device energy budget — devices that can no longer afford
+# a full cycle retire (energy-censored participation).  Same jitted-scan
+# engine family; the CLI equivalent is
+#   python -m repro.launch.train --engine event_driven --fleet uniform \
+#       --energy-budget 4 --max-events 12
+fed = Federation(
+    lambda p, b: jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2),
+    lambda p: -jnp.mean((x.reshape(-1, dim) @ p["w"] - y.reshape(-1)) ** 2),
+    FederationConfig(n_clients=n_clients, n_coalitions=3, rounds=6,
+                     method="coalition", engine="event_driven",
+                     client=ClientConfig(epochs=1, batch_size=10, lr=0.05),
+                     sim=sim.SimConfig(fleet="uniform", seed=0,
+                                       energy_budget=4.0, max_events=12)))
+_, hist = fed.run({"w": jnp.zeros((dim,))}, {"x": x, "y": y},
+                  jax.random.key(4))
+import numpy as np
+print("\nevent timeline (s):  ", [round(t, 2) for t in hist.event_times])
+print("deliveries/event:    ", [sum(r) for r in hist.participation])
+print("energy spent (J):    ",
+      [round(float(s), 2) for s in np.sum(hist.energy_spent, axis=1)])
+print("devices retired:     ",
+      [sum(r) for r in hist.energy_exhausted])

@@ -7,7 +7,7 @@ drives an arbitrary registered strategy:
   broadcast θ -> vmapped ClientUpdate over all clients -> (N, D) weight
   matrix -> ``strategy.round(w, state)`` -> new θ + next state + metrics
 
-Three interchangeable engines execute that round program:
+Four interchangeable engines execute that round program:
 
   ``'scan'``       (default) — the whole federation (all R rounds, eval
                  included) is ONE jitted ``jax.lax.scan`` program: zero
@@ -31,13 +31,28 @@ Three interchangeable engines execute that round program:
                  participation, zero latency) the substrate reduces to
                  exact no-ops and this engine reproduces ``scan``
                  bit-for-bit (tested in ``tests/test_sim.py``).
+  ``'event_driven'`` — the continuous-time variant: no round barrier at
+                 all.  Devices report whenever their own
+                 download+compute+upload cycle completes; the engine pops
+                 completion events off a scan-carried continuous-time
+                 queue, applies each arriving update through the same
+                 ``Strategy.round(w, state, mask=...)`` contract with
+                 staleness measured in simulated *seconds*, and depletes a
+                 per-device **energy budget** every train/transmit cycle —
+                 devices that can no longer afford a cycle retire
+                 (energy-censored participation).  Still one jitted
+                 ``lax.scan`` (over a fixed event budget, default
+                 ``rounds - 1``); on the ``ideal`` fleet with an unbounded
+                 budget every event fires the full simultaneous cohort and
+                 the engine reproduces ``scan`` bit-for-bit (tested in
+                 ``tests/test_event_driven.py``).
 
-All engines follow the identical PRNG-split discipline (``semi_async``
-draws availability from a *forked* stream via ``fold_in``, leaving the
-client-update chain untouched), so on a fixed seed they produce the same
+All engines follow the identical PRNG-split discipline (the substrate
+engines draw availability from a *forked* stream via ``fold_in``, leaving
+the client-update chain untouched), so on a fixed seed they produce the same
 per-round θ and :class:`History` whenever the substrate is idle.  Per-round
-metrics (loss, accuracy, coalition structure, and — under ``semi_async`` —
-participation/sim-clock/bytes) land in a :class:`History` whose list-based
+metrics (loss, accuracy, coalition structure, and — under the substrate
+engines — participation/sim-clock/bytes/energy) land in a :class:`History` whose list-based
 view (``.rounds``, ``.test_acc``, ...) is preserved as compatibility
 properties for the benchmark harness (Figs. 2-4).
 """
@@ -78,6 +93,7 @@ class FederationConfig(NamedTuple):
     client: ClientConfig = ClientConfig()
     backend: str = "xla"               # distance/barycenter backend name
     engine: str = "scan"               # 'scan' | 'python' | 'semi_async'
+    #                                    | 'event_driven'
     sim: sim_mod.SimConfig = sim_mod.SimConfig()   # IoT substrate knobs
 
 
@@ -85,7 +101,11 @@ class Trace(NamedTuple):
     """Stacked per-round device arrays for R rounds (the scan outputs).
 
     The four core metrics are always present; the substrate metrics are
-    filled by the ``semi_async`` engine and None on the idealized engines.
+    filled by the ``semi_async``/``event_driven`` engines and None on the
+    idealized engines.  Under ``event_driven`` a "round" is one completion
+    *event*: ``sim_time`` holds the per-event elapsed seconds (so cumulative
+    sums stay meaningful across engines) and the event-only fields below
+    hold the absolute timestamp and the energy ledger.
     """
 
     loss: jax.Array        # (R,)   mean training loss of participating clients
@@ -96,6 +116,11 @@ class Trace(NamedTuple):
     wan_bytes: jax.Array | None = None      # (R,) bytes over the WAN link
     edge_bytes: jax.Array | None = None     # (R,) bytes over edge links
     participation: jax.Array | None = None  # (R, N) 0/1 participation mask
+    # --- event_driven only ---------------------------------------------------
+    event_time: jax.Array | None = None        # (R,) absolute sim seconds
+    energy_spent: jax.Array | None = None      # (R, N) cumulative joules spent
+    energy_exhausted: jax.Array | None = None  # (R, N) 1 = device retired
+    #                                            (cannot afford another cycle)
 
 
 @dataclasses.dataclass
@@ -157,6 +182,25 @@ class History:
             return None
         return np.asarray(self.trace.participation).astype(int).tolist()
 
+    @property
+    def event_times(self) -> list[float] | None:
+        """Absolute simulated timestamp of each event (event_driven only)."""
+        return self._float_list(self.trace.event_time)
+
+    @property
+    def energy_spent(self) -> list[list[float]] | None:
+        """Per-device cumulative joules spent, per event (event_driven only)."""
+        if self.trace.energy_spent is None:
+            return None
+        return np.asarray(self.trace.energy_spent).astype(float).tolist()
+
+    @property
+    def energy_exhausted(self) -> list[list[int]] | None:
+        """Per-device energy-censoring flags, per event (event_driven only)."""
+        if self.trace.energy_exhausted is None:
+            return None
+        return np.asarray(self.trace.energy_exhausted).astype(int).tolist()
+
 
 class Federation:
     """A federation = one strategy + one engine over a client population.
@@ -191,6 +235,14 @@ class Federation:
             raise ValueError(
                 f"unknown fleet profile {cfg.sim.fleet!r}; registered "
                 f"profiles: {sim_mod.available_fleets()}")
+        if not cfg.sim.energy_budget >= 0:          # also rejects NaN
+            raise ValueError(
+                f"energy_budget={cfg.sim.energy_budget} must be >= 0 "
+                f"(joules; inf = unconstrained)")
+        if cfg.sim.max_events is not None and cfg.sim.max_events < 0:
+            raise ValueError(
+                f"max_events={cfg.sim.max_events} must be >= 0 "
+                f"(None = rounds - 1)")
         self.loss_fn = loss_fn
         self.eval_fn = eval_fn
         self.cfg = cfg
@@ -370,7 +422,8 @@ class Federation:
                 loss = jnp.mean(losses * (m * scale))
                 sim_t, wan, edge = sim_mod.round_stats(
                     mask, dev_time, buf.shape[1] * bytes_per_param(buf),
-                    strategy.n_groups, strategy.hierarchical)
+                    strategy.n_groups, strategy.hierarchical,
+                    deadline=scfg.deadline)
                 return ((key, gp, res.state, buf, tau, astate),
                         (loss, acc, res.metrics, m, sim_t, wan, edge))
 
@@ -425,8 +478,161 @@ class Federation:
             key, akey, gp, state, w0, tau0, loss0, acc0, m0, client_data)
         return gp, History(trace=jax.device_get(trace))
 
+    # -- the continuous-time event-driven engine --------------------------------------
+
+    @functools.cached_property
+    def _event_driven_engine(self):
+        """Continuous-time event queue with per-device energy budgets.
+
+        No round barrier: each device runs its own train-and-report cycle of
+        :func:`repro.sim.device_round_time` seconds, and the engine advances
+        simulated time completion-by-completion.  The event queue is the
+        scan-carried ``(N,)`` ``next_t`` vector of per-device completion
+        times — with one outstanding cycle per device, ``argmin`` IS the
+        heap pop, and exact ties (the ideal fleet, where every cycle takes
+        0.0 s) fire as one cohort, which is what collapses the event program
+        back onto the round-synchronous one.  Per event:
+
+          cohort  <- { i : next_t[i] == min(next_t) }         (time := that)
+          deliver <- cohort ∧ availability draw at the report instant
+          buf     <- fresh updates where delivered, else kept
+          θ       <- strategy.round(buf, state, mask=(1 + age_s)^-alpha)
+          energy  <- energy - cohort * event_energy; retire if < event_energy
+          next_t  <- t + cycle time for survivors, +inf for retirees
+
+        with staleness measured in simulated *seconds* since each buffered
+        row was delivered.  If every device has retired, ``min(next_t)`` is
+        +inf: nothing fires, the clock freezes, and the remaining events are
+        recorded as zero-participation intervals (θ re-aggregates the frozen
+        buffer — stable, never NaN).  Energy is charged per *attempt*
+        (the device trained and transmitted even if its uplink draw failed),
+        and the forced round-0 census is pre-paid.  All of it is ONE jitted
+        ``lax.scan`` over the static event budget ``sim.max_events``
+        (default ``rounds - 1``) — no per-event host dispatch.
+        """
+        cfg, scfg = self.cfg, self.cfg.sim
+        fleet, strategy = self._fleet, self.strategy
+        n_events = (scfg.max_events if scfg.max_events is not None
+                    else cfg.rounds - 1)
+
+        def step_with(data, dev_time, e_event, model_bytes):
+            def step(carry, _):
+                (key, params, state, buf, last_t, energy, spent, next_t,
+                 clock, astate) = carry
+                key, kr = jax.random.split(key)      # same chain as 'scan'
+                online, astate = sim_mod.sample_mask(astate, fleet,
+                                                     scfg.participation)
+                # pop the next completion cohort off the continuous-time
+                # queue; an all-inf queue (every device retired) fires
+                # nothing and freezes the clock.
+                t_next = jnp.min(next_t)
+                fired_any = jnp.isfinite(t_next)
+                t_now = jnp.where(fired_any, t_next, clock)
+                fire = jnp.logical_and(next_t == t_next, fired_any)
+                deliver = jnp.logical_and(fire, online)
+                w, losses = self._local_phase(params, data, kr)
+                buf = jnp.where(deliver[:, None], w, buf)
+                last_t = jnp.where(deliver, t_now, last_t)
+                # staleness age in simulated seconds; a row delivered this
+                # event has age exactly 0 => weight exactly 1.0, so the
+                # all-simultaneous cohort reduces to the synchronous round.
+                eff = sim_mod.staleness_weights(t_now - last_t,
+                                                scfg.staleness_alpha)
+                res = strategy.round(buf, state, mask=eff)
+                gp = pytree.unflatten(res.theta, params)
+                acc = self.eval_fn(gp)
+                m = deliver.astype(jnp.float32)
+                scale = cfg.n_clients / jnp.maximum(jnp.sum(m), 1.0)
+                loss = jnp.mean(losses * (m * scale))
+                paid = fire.astype(jnp.float32) * e_event
+                energy = energy - paid
+                spent = spent + paid
+                alive = energy >= e_event
+                next_t = jnp.where(
+                    fire, jnp.where(alive, t_now + dev_time, jnp.inf),
+                    next_t)
+                _, wan, edge = sim_mod.round_stats(
+                    deliver, dev_time, model_bytes,
+                    strategy.n_groups, strategy.hierarchical)
+                return ((key, gp, res.state, buf, last_t, energy, spent,
+                         next_t, t_now, astate),
+                        (loss, acc, res.metrics, m, t_now - clock, t_now,
+                         wan, edge, spent,
+                         jnp.logical_not(alive).astype(jnp.float32)))
+
+            return step
+
+        def engine(key, akey, gp, state, buf, loss0, acc0, m0, client_data):
+            n = cfg.n_clients
+            model_bytes = buf.shape[1] * bytes_per_param(buf)
+            dev_time = sim_mod.device_round_time(fleet, model_bytes,
+                                                 scfg.local_work)
+            e_event = sim_mod.device_event_energy(fleet, model_bytes,
+                                                  scfg.local_work)
+            astate = sim_mod.init_availability(akey, fleet,
+                                               scfg.participation)
+            mask0 = jnp.ones((n,), bool)             # bootstrap census
+            t0, wan0, edge0 = sim_mod.round_stats(
+                mask0, dev_time, model_bytes, strategy.n_groups,
+                strategy.hierarchical)
+            # The census barrier closes when its straggler reports (t0).
+            # The bootstrap census is forced (it fills the buffer every
+            # engine shares), so a device pays for it only up to what it
+            # has: the ledger can never overdraw the configured budget, and
+            # a device that could not afford the full cycle starts retired
+            # (energy_exhausted from row 0).  Only devices that can afford
+            # the NEXT full cycle enter the event queue.
+            paid0 = jnp.minimum(e_event, jnp.float32(scfg.energy_budget))
+            energy0 = jnp.full((n,), scfg.energy_budget, jnp.float32) - paid0
+            spent0 = paid0
+            alive0 = energy0 >= e_event
+            next_t0 = jnp.where(alive0, t0 + dev_time, jnp.inf)
+            last_t0 = jnp.full((n,), t0)
+            carry0 = (key, gp, state, buf, last_t0, energy0, spent0,
+                      next_t0, t0, astate)
+            (_, gp, state, buf, *_), \
+                (loss, acc, m, pmask, dt, et, wan, edge, spent, dead) = \
+                jax.lax.scan(
+                    step_with(client_data, dev_time, e_event, model_bytes),
+                    carry0, None, length=n_events)
+            trace = Trace(
+                loss=jnp.concatenate([loss0[None], loss]),
+                acc=jnp.concatenate([acc0[None], acc]),
+                assignment=jnp.concatenate([m0.assignment[None], m.assignment]),
+                counts=jnp.concatenate([m0.counts[None], m.counts]),
+                sim_time=jnp.concatenate([t0[None], dt]),
+                wan_bytes=jnp.concatenate([wan0[None], wan]),
+                edge_bytes=jnp.concatenate([edge0[None], edge]),
+                participation=jnp.concatenate(
+                    [mask0.astype(jnp.float32)[None], pmask]),
+                event_time=jnp.concatenate([t0[None], et]),
+                energy_spent=jnp.concatenate([spent0[None], spent]),
+                energy_exhausted=jnp.concatenate(
+                    [jnp.logical_not(alive0).astype(jnp.float32)[None],
+                     dead]))
+            # The final substrate carry is returned (and discarded by the
+            # caller) so every donated input aliases an output buffer.
+            return gp, trace, (state, buf)
+
+        return jax.jit(engine, donate_argnums=(2, 3, 4))
+
+    def _run_event_driven(self, init_params, client_data, key):
+        """Continuous-time federation: jitted census prologue + one scan.
+
+        Same donation/PRNG discipline as ``semi_async``: the availability
+        stream forks off the run key without consuming it, and the round-0
+        buffer, θ, and strategy state are donated into the event program.
+        """
+        akey = jax.random.fold_in(key, sim_mod.AVAILABILITY_STREAM)
+        key, gp, state, w0, loss0, acc0, m0 = self._round0_jit(
+            init_params, client_data, key)
+        gp, trace, _ = self._event_driven_engine(
+            key, akey, gp, state, w0, loss0, acc0, m0, client_data)
+        return gp, History(trace=jax.device_get(trace))
+
     _ENGINES = {"scan": _run_scan, "python": _run_python,
-                "semi_async": _run_semi_async}
+                "semi_async": _run_semi_async,
+                "event_driven": _run_event_driven}
 
     def run(self, init_params: PyTree, client_data: PyTree, key: jax.Array,
             *, engine: str | None = None) -> tuple[PyTree, History]:
@@ -436,8 +642,10 @@ class Federation:
           init_params: θ^(0).
           client_data: pytree of arrays with leading dim (n_clients, n_local, ...).
           key: PRNG key (same key + same strategy => same History on either
-            idealized engine; also on 'semi_async' over the 'ideal' fleet).
-          engine: override ``cfg.engine`` ('scan' | 'python' | 'semi_async').
+            idealized engine; also on 'semi_async' and 'event_driven' over
+            the 'ideal' fleet).
+          engine: override ``cfg.engine`` ('scan' | 'python' | 'semi_async'
+            | 'event_driven').
         """
         name = engine if engine is not None else self.cfg.engine
         try:

@@ -10,14 +10,16 @@ future scenario) is a :class:`Strategy` with one uniform contract:
                                           metrics
 
 ``mask`` is the IoT-substrate participation contract (``repro.sim`` / the
-``semi_async`` engine): an optional (N,) vector of per-client
-participation/staleness weights in [0, 1] — 1 for a client that delivered
-this round, staleness-decayed for a late (buffered) update, 0 for a client
-that must be excluded entirely.  ``mask=None`` is the synchronous path and
+``semi_async`` and ``event_driven`` engines): an optional (N,) vector of
+per-client participation/staleness weights in [0, 1] — 1 for a client that
+delivered this round (or at this event), staleness-decayed for a late
+(buffered) update (decay in rounds under ``semi_async``, in simulated
+seconds under ``event_driven``), 0 for a client that must be excluded
+entirely.  ``mask=None`` is the synchronous path and
 every rule keeps it bit-identical to its pre-mask behaviour; an explicit
 all-ones mask is likewise bit-identical (rules weight by multiplying with
 the mask, and multiplying by exactly 1.0 is an identity), which is what
-lets ``semi_async`` reproduce ``scan`` exactly on an ideal fleet.
+lets both substrate engines reproduce ``scan`` exactly on an ideal fleet.
 
 State is opaque to the engine: the coalition rule carries its
 :class:`~repro.core.coalitions.CoalitionState` center indices, FedAvg carries

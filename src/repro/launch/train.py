@@ -10,6 +10,9 @@ Modes:
 Examples:
   PYTHONPATH=src python -m repro.launch.train --mode fl --method coalition \
       --regime shard --rounds 20
+  PYTHONPATH=src python -m repro.launch.train --mode fl --method coalition \
+      --engine event_driven --fleet cellular-flaky --energy-budget 50 \
+      --max-events 80
   PYTHONPATH=src python -m repro.launch.train --mode pretrain \
       --arch hymba-1.5b --reduced --steps 200
 """
@@ -84,7 +87,9 @@ def run_fl(args) -> dict:
         backend=args.backend, engine=args.engine,
         sim=sim.SimConfig(fleet=args.fleet, participation=args.participation,
                           staleness_alpha=args.staleness,
-                          deadline=args.deadline, seed=args.sim_seed))
+                          deadline=args.deadline,
+                          energy_budget=args.energy_budget,
+                          max_events=args.max_events, seed=args.sim_seed))
     params = cnn.init(jax.random.key(args.seed))
     t0 = time.time()
     fed = Federation(cnn.loss_fn, lambda p: cnn.accuracy(p, xte_j, yte_j),
@@ -99,7 +104,7 @@ def run_fl(args) -> dict:
            "final_assignment": hist.assignments[-1],
            "final_counts": hist.counts[-1],
            "wall_s": round(time.time() - t0, 1)}
-    if hist.sim_times is not None:      # the semi_async substrate accounting
+    if hist.sim_times is not None:      # the IoT-substrate accounting
         out.update({
             "fleet": args.fleet,
             "sim_time_s": round(sum(hist.sim_times), 3),
@@ -107,6 +112,17 @@ def run_fl(args) -> dict:
             "edge_MB": round(sum(hist.edge_bytes) / 1e6, 3),
             "mean_participation": round(
                 float(np.mean(hist.participation)), 3)})
+    if hist.event_times is not None:    # the event_driven energy ledger
+        dead = np.asarray(hist.energy_exhausted)
+        out.update({
+            # null = unconstrained (inf is not valid RFC 8259 JSON)
+            "energy_budget_j": (args.energy_budget
+                                if np.isfinite(args.energy_budget) else None),
+            "events": len(hist.event_times),
+            "final_sim_time_s": round(hist.event_times[-1], 3),
+            "energy_spent_j": round(
+                float(np.sum(np.asarray(hist.energy_spent)[-1])), 3),
+            "devices_exhausted": int(dead[-1].sum())})
     print(json.dumps({k: v for k, v in out.items()
                       if k not in ("rounds",)}, indent=1, default=float))
     return out
@@ -171,10 +187,11 @@ def main() -> None:
     ap.add_argument("--backend", default="xla",
                     choices=["xla", "dot", "pallas"])
     ap.add_argument("--engine", default="scan",
-                    choices=["scan", "python", "semi_async"],
+                    choices=["scan", "python", "semi_async", "event_driven"],
                     help="fully-jitted lax.scan round loop, legacy host "
-                         "loop, or the IoT-substrate partial-participation "
-                         "engine")
+                         "loop, the IoT-substrate partial-participation "
+                         "engine, or the continuous-time event-driven "
+                         "engine with per-device energy budgets")
     # fl: per-strategy hyper-parameters (None -> the rule's default)
     ap.add_argument("--top-m", type=int, default=None,
                     help="coalition_topk: aggregate only the top_m largest "
@@ -193,6 +210,13 @@ def main() -> None:
                     help="staleness decay exponent alpha in (1+tau)^-alpha")
     ap.add_argument("--deadline", type=float, default=float("inf"),
                     help="round deadline in simulated seconds")
+    ap.add_argument("--energy-budget", type=float, default=float("inf"),
+                    help="per-device energy budget in joules "
+                         "(engine=event_driven; each train/transmit cycle "
+                         "depletes it and exhausted devices retire)")
+    ap.add_argument("--max-events", type=int, default=None,
+                    help="event budget of the event_driven engine "
+                         "(default: rounds - 1)")
     ap.add_argument("--sim-seed", type=int, default=0,
                     help="fleet sampling seed")
     # pretrain

@@ -32,11 +32,22 @@ delivered update buffered, staleness-decayed, and every registered
 strategy aggregates through its participation-mask contract.  On the
 ``ideal`` profile the whole substrate reduces to exact no-ops and the
 engine reproduces ``scan`` bit-for-bit.
+
+The ``event_driven`` engine drops the round barrier entirely: simulated
+time advances event-by-event (each event = the cohort of devices whose
+train-and-report cycle completes next, popped from a continuous-time
+queue carried through the scan), staleness is measured in simulated
+*seconds*, and a per-device **energy budget**
+(:func:`~repro.sim.clock.device_event_energy` joules per cycle) gates
+participation — devices that can no longer afford a full cycle retire.
+On the ``ideal`` profile with an unbounded budget it, too, reproduces
+``scan`` bit-for-bit.
 """
 from repro.sim.availability import (AVAILABILITY_STREAM, AvailabilityState,
                                     effective_p, init_availability,
                                     sample_mask)
-from repro.sim.clock import device_round_time, round_stats, staleness_weights
+from repro.sim.clock import (device_event_energy, device_round_time,
+                             round_stats, staleness_weights)
 from repro.sim.devices import (DeviceFleet, SimConfig, available_fleets,
                                make_fleet, register_fleet)
 
@@ -46,6 +57,7 @@ __all__ = [
     "DeviceFleet",
     "SimConfig",
     "available_fleets",
+    "device_event_energy",
     "device_round_time",
     "effective_p",
     "init_availability",

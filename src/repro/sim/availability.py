@@ -11,7 +11,11 @@ way, so ``participation`` is an interpretable knob.
 The process carries its own PRNG key, derived from the run key via
 ``jax.random.fold_in(key, AVAILABILITY_STREAM)`` *without consuming it* —
 the engine's client-update key chain is untouched, which is what makes the
-``semi_async`` engine bit-for-bit equal to ``scan`` on the ``ideal`` fleet.
+``semi_async`` and ``event_driven`` engines bit-for-bit equal to ``scan``
+on the ``ideal`` fleet.  The ``event_driven`` engine advances the chain
+once per completion *event* instead of once per round — a device's upload
+attempt succeeds iff its Markov state is online at the instant it reports,
+so ``persistence`` spans consecutive attempts rather than rounds.
 
 Everything here is shape-static masked computation, safe inside
 ``jax.lax.scan``.

@@ -1,12 +1,17 @@
-"""Simulated wall-clock, staleness decay, and bytes-on-the-wire accounting.
+"""Simulated wall-clock, staleness decay, energy, and bytes-on-the-wire
+accounting.
 
 Turns the static comm-cost *table* (``benchmarks/comm_cost.py``) into live
-per-round accounting inside the federation engine: every round the engine
-records how long the round took on the simulated fleet and how many bytes
-crossed the WAN and the edge links.  All functions are jittable and
-shape-static, so they run inside the scanned round program.
+accounting inside the federation engines: every round (``semi_async``) or
+completion event (``event_driven``) the engine records how long it took on
+the simulated fleet, how many bytes crossed the WAN and the edge links, and
+— under the continuous-time engine — how much energy each device burned
+training and reporting.  All functions are jittable and shape-static, so
+they run inside the scanned round/event programs.
 """
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -17,9 +22,11 @@ from repro.sim.devices import DeviceFleet
 def staleness_weights(tau: jax.Array, alpha: float = 0.5) -> jax.Array:
     """Polynomial staleness decay ``(1 + tau)^-alpha`` (FedAsync family).
 
-    ``tau`` is the per-client integer staleness (rounds since the buffered
-    update was computed); ``tau = 0`` maps to exactly 1.0, so fresh updates
-    are bit-identically unweighted.  ``alpha = 0`` disables the decay.
+    ``tau`` is the per-client staleness of the buffered update — an integer
+    round count under the ``semi_async`` engine, a float *simulated-seconds*
+    age under the ``event_driven`` engine; ``tau = 0`` maps to exactly 1.0,
+    so fresh updates are bit-identically unweighted.  ``alpha = 0`` disables
+    the decay.
     """
     return (1.0 + tau.astype(jnp.float32)) ** jnp.float32(-alpha)
 
@@ -38,14 +45,49 @@ def device_round_time(fleet: DeviceFleet, model_bytes: float,
             + b / fleet.uplink_bps)
 
 
+def device_event_energy(fleet: DeviceFleet, model_bytes: float,
+                        local_work: float = 1.0, *,
+                        compute_power_w: float = 1.0,
+                        tx_power_w: float = 1.0,
+                        rx_power_w: float = 0.5) -> jax.Array:
+    """(N,) joules one train-and-report cycle costs on each device.
+
+    Energy = power x time along the same critical path as
+    :func:`device_round_time`: receive θ at ``rx_power_w`` for the download
+    time, compute ``local_work`` units at ``compute_power_w``, transmit ω at
+    ``tx_power_w`` for the upload time.  The ``ideal`` fleet (zero compute,
+    infinite links) costs exactly 0.0 J — a free event, consistent with its
+    zero round time — so the identity profile never depletes any budget.
+
+    The ``event_driven`` engine depletes each device's
+    :class:`~repro.sim.devices.SimConfig` ``energy_budget`` by this amount
+    per completion event and retires devices that can no longer afford a
+    full cycle (energy-censored participation).
+    """
+    b = jnp.float32(model_bytes)
+    return (jnp.float32(rx_power_w) * b / fleet.downlink_bps
+            + jnp.float32(compute_power_w) * jnp.float32(local_work)
+            * fleet.compute_s
+            + jnp.float32(tx_power_w) * b / fleet.uplink_bps)
+
+
 def round_stats(mask: jax.Array, device_time: jax.Array, model_bytes: float,
                 n_groups: int, hierarchical: bool,
+                deadline: float = float("inf"),
                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Per-round ``(sim_time_s, wan_bytes, edge_bytes)`` for one round.
 
-    ``sim_time`` is the synchronization point: the slowest *participating*
-    device (the round's straggler).  Byte accounting mirrors
-    :func:`repro.core.aggregation.comm_coalition` /
+    ``sim_time`` is the synchronization point.  Under a finite ``deadline``
+    the server can only close a round early when *every* device has
+    reported — it cannot distinguish an offline device from a late one, so
+    any round with absentees (including the all-miss empty round) costs the
+    full deadline, and only a full round closes at its slowest
+    participant.  This keeps the cumulative clock honest: a missed device
+    is never free.  With an infinite deadline there is no defined waiting
+    period, so the round closes at its slowest participant (0.0 when
+    empty — the degenerate case).
+
+    Byte accounting mirrors :func:`repro.core.aggregation.comm_coalition` /
     :func:`~repro.core.aggregation.comm_fedavg`: flat rules ship every
     participant's full model over the WAN both ways; hierarchical
     (coalition) rules ship participants to coalition heads over the edge
@@ -55,6 +97,11 @@ def round_stats(mask: jax.Array, device_time: jax.Array, model_bytes: float,
     m = mask.astype(jnp.float32)
     n_present = jnp.sum(m)
     sim_time = jnp.max(jnp.where(mask, device_time, 0.0))
+    if math.isfinite(deadline):
+        # static python branch: the infinite-deadline path keeps its exact
+        # pre-deadline codegen (bit-for-bit engine parity on ideal fleets)
+        sim_time = jnp.where(n_present >= mask.shape[0], sim_time,
+                             jnp.float32(deadline))
     traffic = 2.0 * jnp.float32(model_bytes)       # up + down per model
     if hierarchical:
         wan = jnp.minimum(jnp.float32(n_groups), n_present) * traffic

@@ -46,11 +46,26 @@ class SimConfig(NamedTuple):
     ``participation``   — global scale on per-device availability
                           probability (0..1); 1 keeps the profile as-is.
     ``staleness_alpha`` — exponent of the polynomial staleness decay
-                          ``(1 + tau)^-alpha`` applied to late updates.
+                          ``(1 + tau)^-alpha`` applied to late updates
+                          (``tau`` in rounds under ``semi_async``, in
+                          simulated seconds under ``event_driven``).
     ``deadline``        — round deadline in simulated seconds; devices whose
-                          download+compute+upload exceeds it miss the round.
+                          download+compute+upload exceeds it miss the round
+                          (``semi_async`` only — the continuous-time engine
+                          has no round barrier to miss).
     ``local_work``      — simulated compute units one local round costs
                           (scales ``DeviceFleet.compute_s``).
+    ``energy_budget``   — per-device energy budget in joules; every
+                          train-and-report event depletes it by
+                          :func:`~repro.sim.clock.device_event_energy` and a
+                          device that can no longer afford a full cycle
+                          stops participating (``event_driven`` only;
+                          ``inf`` = unconstrained, the identity setting).
+    ``max_events``      — event budget of the ``event_driven`` engine (the
+                          static length of its scanned program); ``None``
+                          defaults to ``rounds - 1``, which makes the ideal
+                          fleet reproduce the ``scan`` engine's trajectory
+                          shape exactly.
     ``seed``            — fleet-sampling seed (device table + availability
                           stream are functions of this and the run key).
     """
@@ -60,6 +75,8 @@ class SimConfig(NamedTuple):
     staleness_alpha: float = 0.5
     deadline: float = float("inf")
     local_work: float = 1.0
+    energy_budget: float = float("inf")
+    max_events: int | None = None
     seed: int = 0
 
 

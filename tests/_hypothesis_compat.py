@@ -1,32 +1,119 @@
-"""Optional-hypothesis shim.
+"""Optional-hypothesis shim with a deterministic fallback engine.
 
 The property tests use ``hypothesis``, which may not be installed in minimal
 environments.  Importing ``given``/``settings``/``st`` from here keeps the
-module collectable either way: with hypothesis installed the real decorators
-are re-exported; without it, ``@given(...)`` marks just the property tests as
-skipped while every plain test in the module still runs.
+property tier *running* either way:
+
+* with hypothesis installed (CI), the real decorators are re-exported —
+  full random generation, shrinking, and the example database;
+* without it, a miniature property engine stands in: ``@given(...)`` draws
+  ``max_examples`` examples per test from a seeded ``numpy`` generator
+  (seed = CRC32 of the test's qualified name, so runs are reproducible and
+  failures re-fire identically on re-run) and executes the test body once
+  per example.  No shrinking — the failing example's drawn values surface
+  through pytest's normal assertion traceback.
+
+Fallback-mode contract (the subset the property tiers use):
+
+* ``@given`` accepts keyword strategies and/or positional strategies;
+  positional ones fill the *rightmost* test parameters, matching
+  hypothesis' own convention (so ``self`` and pytest fixtures on the left
+  are untouched);
+* ``@settings`` works in either decorator order; only ``max_examples`` is
+  honoured, other knobs (``deadline``, ...) are accepted and ignored;
+* ``st`` provides ``integers``, ``floats``, ``booleans``, ``sampled_from``,
+  and ``lists`` with their common keyword arguments.
 """
 from __future__ import annotations
 
-import pytest
+import functools
+import inspect
+import zlib
 
 try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
     HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
+    import numpy as _np
+
     HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 10
 
-    class _AnyStrategy:
-        """Stands in for ``hypothesis.strategies``; every call returns None."""
+    class _Strategy:
+        """A value generator: ``draw(rng) -> value``."""
 
-        def __getattr__(self, name):
-            return lambda *a, **k: None
+        def __init__(self, draw):
+            self.draw = draw
 
-    st = _AnyStrategy()
+    class _St:
+        """Fallback ``hypothesis.strategies`` namespace (subset)."""
 
-    def given(*args, **kwargs):
-        return lambda fn: pytest.mark.skip(
-            reason="hypothesis not installed")(fn)
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
 
-    def settings(*args, **kwargs):
-        return lambda fn: fn
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_ignored):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_ignored):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    st = _St()
+
+    def given(*strategy_args, **strategy_kwargs):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            mapping = dict(strategy_kwargs)
+            if strategy_args:
+                # hypothesis convention: positional strategies fill the
+                # RIGHTMOST parameters (self / fixtures stay on the left)
+                mapping.update(zip(names[-len(strategy_args):],
+                                   strategy_args))
+
+            @functools.wraps(fn)        # keeps pytest marks (fn.__dict__)
+            def wrapper(*a, **kw):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                base = zlib.crc32(fn.__qualname__.encode())
+                for i in range(n):
+                    rng = _np.random.default_rng((base + i) & 0xFFFFFFFF)
+                    drawn = {name: s.draw(rng)
+                             for name, s in mapping.items()}
+                    fn(*a, **drawn, **kw)
+
+            # pytest must see the original signature MINUS the drawn
+            # parameters — otherwise it would treat `seed` etc. as fixtures
+            # (real hypothesis hides them the same way).  An explicit
+            # __signature__ also stops inspect from following __wrapped__.
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items() if name not in mapping])
+            wrapper.is_hypothesis_fallback = True
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=None, **_ignored):
+        def deco(fn):
+            if max_examples is not None:
+                fn._max_examples = max_examples
+            return fn
+
+        return deco

@@ -1,0 +1,291 @@
+"""The continuous-time ``event_driven`` engine: bit-for-bit scan parity on
+the identity regime (ideal fleet, unbounded energy), event ordering against
+a host-side reference schedule, energy-depletion gating, and the
+zero-participation-interval regression (a fully retired fleet must freeze
+the clock and keep θ finite, never NaN)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sim
+from repro.core import strategies
+from repro.core.client import ClientConfig
+from repro.core.server import Federation, FederationConfig, bytes_per_param
+
+N_CLIENTS, N_LOCAL, DIM = 6, 20, 12
+MODEL_BYTES = DIM * 4                       # float32 weight vector
+
+
+@pytest.fixture(scope="module")
+def lsq():
+    """Tiny least-squares federation problem (fast to compile)."""
+    kx, kw, kt = jax.random.split(jax.random.key(0), 3)
+    x = jax.random.normal(kx, (N_CLIENTS, N_LOCAL, DIM))
+    w_true = jax.random.normal(kw, (DIM,))
+    y = x @ w_true + 0.1 * jax.random.normal(kt, (N_CLIENTS, N_LOCAL))
+
+    def loss_fn(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    xe = x.reshape(-1, DIM)[:40]
+    ye = (x @ w_true).reshape(-1)[:40]
+    eval_fn = lambda p: -jnp.mean((xe @ p["w"] - ye) ** 2)
+    return loss_fn, eval_fn, {"x": x, "y": y}, {"w": jnp.zeros((DIM,))}
+
+
+def _cfg(method="coalition", rounds=4, engine="event_driven", **sim_kw):
+    return FederationConfig(
+        n_clients=N_CLIENTS, n_coalitions=2, rounds=rounds, method=method,
+        client=ClientConfig(epochs=1, batch_size=10, lr=0.01),
+        engine=engine, sim=sim.SimConfig(**sim_kw))
+
+
+def _run(lsq, cfg, key=7, engine=None):
+    loss_fn, eval_fn, cd, params = lsq
+    fed = Federation(loss_fn, eval_fn, cfg)
+    return fed.run(params, cd, jax.random.key(key),
+                   engine=engine or cfg.engine)
+
+
+# --- the identity regime: scan parity ----------------------------------------------
+
+class TestScanParity:
+    @pytest.mark.parametrize("method", sorted(strategies._STRATEGIES))
+    def test_ideal_fleet_unbounded_energy_bit_identical_to_scan(
+            self, lsq, method):
+        """Acceptance: every registered strategy runs on event_driven, and
+        on the ideal fleet with an infinite energy budget (every cycle is
+        free and instant, so each event fires the full simultaneous cohort)
+        it reproduces the scan engine bit-for-bit on a fixed seed."""
+        loss_fn, eval_fn, cd, params = lsq
+        fed = Federation(loss_fn, eval_fn, _cfg(method=method, fleet="ideal"))
+        key = jax.random.key(7)
+        gp_s, h_s = fed.run(params, cd, key, engine="scan")
+        gp_e, h_e = fed.run(params, cd, key, engine="event_driven")
+        np.testing.assert_array_equal(np.asarray(gp_s["w"]),
+                                      np.asarray(gp_e["w"]))
+        for field in ("loss", "acc", "assignment", "counts"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(h_s.trace, field)),
+                np.asarray(getattr(h_e.trace, field)), err_msg=field)
+        # the substrate is idle: full cohorts, zero time, zero energy
+        assert np.asarray(h_e.trace.participation).all()
+        np.testing.assert_array_equal(np.asarray(h_e.trace.event_time), 0.0)
+        np.testing.assert_array_equal(np.asarray(h_e.trace.sim_time), 0.0)
+        np.testing.assert_array_equal(np.asarray(h_e.trace.energy_spent), 0.0)
+        np.testing.assert_array_equal(
+            np.asarray(h_e.trace.energy_exhausted), 0.0)
+
+    def test_event_driven_deterministic(self, lsq):
+        cfg = _cfg(rounds=6, fleet="lognormal-edge", seed=4)
+        _, h1 = _run(lsq, cfg, key=9)
+        _, h2 = _run(lsq, cfg, key=9)
+        for f1, f2 in zip(h1.trace, h2.trace):
+            np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+
+    def test_scan_trace_has_no_event_fields(self, lsq):
+        _, hist = _run(lsq, _cfg(engine="scan"), engine="scan")
+        assert hist.trace.event_time is None
+        assert hist.event_times is None
+        assert hist.energy_spent is None
+        assert hist.energy_exhausted is None
+
+
+# --- event ordering ----------------------------------------------------------------
+
+def _expected_schedule(dev_time: np.ndarray, n_events: int):
+    """Host-side reference: the continuous-time completion schedule for a
+    fully-available fleet with unbounded energy, in float32 (matching the
+    engine's arithmetic exactly)."""
+    dev = dev_time.astype(np.float32)
+    t0 = dev.max()                        # census barrier
+    next_t = t0 + dev
+    times, fires = [], []
+    for _ in range(n_events):
+        t = next_t.min()
+        fire = next_t == t
+        times.append(t)
+        fires.append(fire)
+        next_t = np.where(fire, t + dev, next_t).astype(np.float32)
+    return np.asarray(times), np.stack(fires)
+
+
+class TestEventOrdering:
+    def test_events_fire_in_completion_order(self, lsq):
+        """On the uniform fleet (always available, heterogeneous speeds)
+        the engine must pop devices exactly in completion-time order —
+        device i delivers at census + k * cycle_i, fastest devices
+        delivering more often."""
+        n_events = 11
+        cfg = _cfg(method="fedavg", rounds=n_events + 1, fleet="uniform",
+                   seed=0)
+        _, hist = _run(lsq, cfg)
+        fleet = sim.make_fleet("uniform", N_CLIENTS, seed=0)
+        dev = np.asarray(sim.device_round_time(fleet, MODEL_BYTES))
+        times, fires = _expected_schedule(dev, n_events)
+        part = np.asarray(hist.trace.participation)
+        np.testing.assert_array_equal(part[0], 1.0)      # census cohort
+        np.testing.assert_array_equal(part[1:], fires.astype(np.float32))
+        np.testing.assert_allclose(np.asarray(hist.trace.event_time)[1:],
+                                   times, rtol=1e-6)
+        # absolute timestamps never decrease, deltas reconstruct them
+        et = np.asarray(hist.trace.event_time)
+        assert (np.diff(et) >= 0).all()
+        np.testing.assert_allclose(np.cumsum(np.asarray(hist.trace.sim_time)),
+                                   et, rtol=1e-5)
+
+    def test_fast_devices_deliver_more_often(self, lsq):
+        cfg = _cfg(method="fedavg", rounds=25, fleet="uniform", seed=0)
+        _, hist = _run(lsq, cfg)
+        fleet = sim.make_fleet("uniform", N_CLIENTS, seed=0)
+        dev = np.asarray(sim.device_round_time(fleet, MODEL_BYTES))
+        deliveries = np.asarray(hist.trace.participation)[1:].sum(axis=0)
+        assert deliveries[np.argmin(dev)] >= deliveries[np.argmax(dev)]
+        assert deliveries[np.argmin(dev)] > 1
+
+    def test_max_events_overrides_rounds(self, lsq):
+        cfg = _cfg(rounds=3, fleet="uniform", max_events=7)
+        _, hist = _run(lsq, cfg)
+        assert np.asarray(hist.trace.loss).shape == (8,)   # census + 7 events
+        cfg = _cfg(rounds=3, fleet="uniform", max_events=0)
+        _, hist = _run(lsq, cfg)
+        assert np.asarray(hist.trace.loss).shape == (1,)   # census only
+
+
+# --- energy budgets ----------------------------------------------------------------
+
+class TestEnergyBudget:
+    BUDGET = 3.0
+
+    @pytest.fixture(scope="class")
+    def hist(self, lsq):
+        cfg = _cfg(method="fedavg", rounds=10, fleet="uniform", seed=0,
+                   energy_budget=self.BUDGET)
+        _, hist = _run(lsq, cfg, key=3)
+        return hist
+
+    def test_spent_monotone_and_capped(self, hist):
+        spent = np.asarray(hist.trace.energy_spent)
+        assert (np.diff(spent, axis=0) >= 0).all()
+        assert (spent <= self.BUDGET + 1e-5).all()
+
+    def test_depletion_gates_participation(self, hist):
+        """Once a device is flagged energy-exhausted it never participates
+        again (retirement is permanent — energy only depletes)."""
+        dead = np.asarray(hist.trace.energy_exhausted).astype(bool)
+        part = np.asarray(hist.trace.participation).astype(bool)
+        assert (dead[1:] >= dead[:-1]).all()              # never resurrects
+        assert not (dead[:-1] & part[1:]).any()           # dead never delivers
+        assert dead[-1].any()                             # budget binds...
+        assert not dead[0].all()                          # ...but not at birth
+
+    def test_spent_counts_attempts(self, hist):
+        """Cumulative energy = (#cycles fired) x per-cycle joules — on the
+        always-available uniform fleet every fired cycle also delivers."""
+        fleet = sim.make_fleet("uniform", N_CLIENTS, seed=0)
+        e = np.asarray(sim.device_event_energy(fleet, MODEL_BYTES))
+        part = np.asarray(hist.trace.participation)
+        np.testing.assert_allclose(np.asarray(hist.trace.energy_spent)[-1],
+                                   part.sum(axis=0) * e, rtol=1e-5)
+
+    def test_sub_cycle_budget_never_overdrawn(self, lsq):
+        """Regression: a budget smaller than one cycle's cost must not be
+        overdrawn by the forced census — devices pay only up to what they
+        have, start retired, and the ledger stays within the budget."""
+        budget = 0.1                       # < every uniform-fleet cycle cost
+        cfg = _cfg(method="fedavg", rounds=5, fleet="uniform", seed=0,
+                   energy_budget=budget)
+        _, hist = _run(lsq, cfg, key=3)
+        spent = np.asarray(hist.trace.energy_spent)
+        assert (spent <= budget + 1e-7).all()
+        assert np.asarray(hist.trace.energy_exhausted).all()
+        assert not np.asarray(hist.trace.participation)[1:].any()
+
+    def test_infinite_budget_never_exhausts(self, lsq):
+        cfg = _cfg(method="fedavg", rounds=6, fleet="uniform", seed=0)
+        _, hist = _run(lsq, cfg)
+        np.testing.assert_array_equal(
+            np.asarray(hist.trace.energy_exhausted), 0.0)
+
+    def test_energy_validation_eager(self, lsq):
+        loss_fn, eval_fn, _, _ = lsq
+        with pytest.raises(ValueError, match="energy_budget"):
+            Federation(loss_fn, eval_fn, _cfg(energy_budget=-1.0))
+        with pytest.raises(ValueError, match="max_events"):
+            Federation(loss_fn, eval_fn, _cfg(max_events=-2))
+
+
+# --- zero-participation intervals --------------------------------------------------
+
+class TestZeroParticipationInterval:
+    def test_fully_retired_fleet_freezes_clock_and_stays_finite(self, lsq):
+        """Budget covers only the census: every device retires immediately,
+        so all events are zero-participation intervals.  The clock must not
+        advance, θ must stay finite and constant, and loss/acc must never
+        go NaN — the regression this class pins down."""
+        cfg = _cfg(method="fedavg", rounds=6, fleet="uniform", seed=0,
+                   energy_budget=1.0)
+        gp, hist = _run(lsq, cfg, key=3)
+        part = np.asarray(hist.trace.participation)
+        assert part[0].all() and not part[1:].any()
+        dead = np.asarray(hist.trace.energy_exhausted)
+        assert dead.all()                                  # from the census on
+        assert np.isfinite(np.asarray(gp["w"])).all()
+        assert np.isfinite(hist.test_acc).all()
+        assert np.isfinite(hist.train_loss).all()
+        # the frozen buffer re-aggregates to the same θ: accuracy constant
+        acc = np.asarray(hist.trace.acc)
+        np.testing.assert_array_equal(acc[1:], acc[1])
+        # no progress, no time: the clock freezes at the census barrier
+        et = np.asarray(hist.trace.event_time)
+        np.testing.assert_array_equal(et, et[0])
+        np.testing.assert_array_equal(np.asarray(hist.trace.sim_time)[1:], 0.0)
+        # and no bytes move either
+        assert np.asarray(hist.trace.wan_bytes)[1:].sum() == 0.0
+
+    def test_coalition_strategy_survives_retired_fleet(self, lsq):
+        cfg = _cfg(method="coalition", rounds=5, fleet="uniform", seed=0,
+                   energy_budget=1.0)
+        gp, hist = _run(lsq, cfg, key=3)
+        assert np.isfinite(np.asarray(gp["w"])).all()
+        assert np.isfinite(np.asarray(hist.trace.counts)).all()
+
+
+# --- substrate accounting ----------------------------------------------------------
+
+class TestEventAccounting:
+    def test_flat_wan_bytes_scale_with_deliveries(self, lsq):
+        cfg = _cfg(method="fedavg", rounds=9, fleet="cellular-flaky", seed=3)
+        _, hist = _run(lsq, cfg, key=1)
+        part = np.asarray(hist.trace.participation)
+        np.testing.assert_allclose(np.asarray(hist.trace.wan_bytes),
+                                   part.sum(axis=1) * 2 * MODEL_BYTES,
+                                   rtol=1e-6)
+        assert np.asarray(hist.trace.edge_bytes).sum() == 0.0
+
+    def test_hierarchical_wan_capped_by_coalitions(self, lsq):
+        cfg = _cfg(method="coalition", rounds=9, fleet="cellular-flaky",
+                   seed=3)
+        _, hist = _run(lsq, cfg, key=1)
+        part = np.asarray(hist.trace.participation)
+        wan = np.asarray(hist.trace.wan_bytes)
+        k = 2                                              # n_coalitions
+        np.testing.assert_allclose(
+            wan, np.minimum(part.sum(axis=1), k) * 2 * MODEL_BYTES, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(hist.trace.edge_bytes),
+                                   part.sum(axis=1) * 2 * MODEL_BYTES,
+                                   rtol=1e-6)
+
+    def test_flaky_fleet_drops_some_uploads(self, lsq):
+        """On a flaky fleet some completion events fail the availability
+        draw: cycles fire (energy is charged) but nothing is delivered."""
+        cfg = _cfg(method="fedavg", rounds=30, fleet="cellular-flaky",
+                   seed=3, energy_budget=float("inf"))
+        _, hist = _run(lsq, cfg, key=1)
+        part = np.asarray(hist.trace.participation)[1:]
+        assert 0 < part.sum() < part.size
+
+    def test_bytes_per_param_tracks_dtype(self):
+        assert bytes_per_param(jnp.zeros((2, 3), jnp.float32)) == 4
+        assert bytes_per_param(jnp.zeros((2, 3), jnp.bfloat16)) == 2

@@ -1,0 +1,244 @@
+"""Property-based invariants over the strategy × engine × backend matrix.
+
+Cross-cutting laws that every registered aggregation rule / compute backend
+/ federation engine must satisfy on *arbitrary* inputs — the hand-picked
+examples in ``test_strategies.py``/``test_sim.py`` pin specific behaviours,
+this tier sweeps the space:
+
+  * **mass conservation** — every rule emits θ as an affine combination of
+    client rows with non-negative coefficients summing to 1: identical
+    clients are reproduced exactly, and θ never leaves the per-coordinate
+    convex hull of the client weights, masked or not;
+  * **permutation equivariance** — relabelling clients permutes the
+    coalition assignment and leaves θ/counts invariant (no client is
+    special by position);
+  * **staleness-weight monotonicity** — ``(1+tau)^-alpha`` is exactly 1 at
+    ``tau = 0``, strictly decreasing in ``tau`` (rounds *or* seconds), and
+    decreasing in ``alpha``;
+  * **engine equivalence** — on the identity substrate (ideal fleet,
+    unbounded energy) all four engines produce the same federation.
+
+Runs under real hypothesis when installed (CI) and under the deterministic
+fallback engine in ``_hypothesis_compat`` otherwise.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro import sim
+from repro.core import coalitions, strategies
+from repro.core.client import ClientConfig
+from repro.core.coalitions import CoalitionState
+from repro.core.server import Federation, FederationConfig
+
+N, D, K = 7, 24, 3
+BACKENDS = ("xla", "dot", "pallas")
+STRATEGIES = sorted(strategies._STRATEGIES)
+
+
+def _rand_w(seed: int, n: int = N, d: int = D) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+
+
+def _rand_mask(seed: int, n: int = N) -> jnp.ndarray:
+    """Random participation/staleness weights bounded away from all-zero."""
+    rng = np.random.default_rng(seed + 0x5EED)
+    return jnp.asarray(rng.uniform(0.05, 1.0, n).astype(np.float32))
+
+
+def _make(name: str, backend: str) -> strategies.Strategy:
+    return strategies.make_strategy(name, n_clients=N, n_coalitions=K,
+                                    backend=backend)
+
+
+# --- aggregation mass conservation -------------------------------------------------
+
+class TestMassConservation:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("name", STRATEGIES)
+    @given(seed=st.integers(0, 10_000), masked=st.booleans())
+    @settings(max_examples=5, deadline=None)
+    def test_identical_clients_reproduced(self, name, backend, seed, masked):
+        """If every client holds the same weights v, θ must be v — any rule
+        whose coefficients fail to sum to 1 shifts it."""
+        v = _rand_w(seed, n=1)[0]
+        w = jnp.tile(v[None, :], (N, 1))
+        s = _make(name, backend)
+        state = s.init_state(jax.random.key(seed), w)
+        mask = _rand_mask(seed) if masked else None
+        res = s.round(w, state, mask=mask)
+        np.testing.assert_allclose(np.asarray(res.theta), np.asarray(v),
+                                   rtol=1e-5, atol=1e-6,
+                                   err_msg=f"{name}/{backend}")
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("name", STRATEGIES)
+    @given(seed=st.integers(0, 10_000), masked=st.booleans())
+    @settings(max_examples=5, deadline=None)
+    def test_theta_stays_in_convex_hull(self, name, backend, seed, masked):
+        """θ is a convex combination of client rows (coalition barycenters,
+        trimmed means, and masked means all have non-negative coefficients
+        summing to 1), so it can never leave the per-coordinate envelope."""
+        w = _rand_w(seed)
+        s = _make(name, backend)
+        state = s.init_state(jax.random.key(seed), w)
+        mask = _rand_mask(seed) if masked else None
+        theta = np.asarray(s.round(w, state, mask=mask).theta)
+        wn = np.asarray(w)
+        eps = 1e-4
+        assert (theta >= wn.min(axis=0) - eps).all(), f"{name}/{backend}"
+        assert (theta <= wn.max(axis=0) + eps).all(), f"{name}/{backend}"
+
+    @pytest.mark.parametrize("name", STRATEGIES)
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=5, deadline=None)
+    def test_counts_conserve_client_mass(self, name, seed):
+        """Unmasked metrics account for every client exactly once."""
+        w = _rand_w(seed)
+        s = _make(name, "xla")
+        res = s.round(w, s.init_state(jax.random.key(seed), w))
+        assert float(np.asarray(res.metrics.counts).sum()) == N
+        a = np.asarray(res.metrics.assignment)
+        assert ((a >= 0) & (a < s.n_groups)).all()
+
+
+# --- permutation equivariance ------------------------------------------------------
+
+class TestPermutationEquivariance:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("fused", [True, False])
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=5, deadline=None)
+    def test_coalition_round_equivariant(self, backend, fused, seed):
+        """Relabelling clients (rows w[i] -> position inv[i]) must permute
+        the assignment the same way and leave θ, counts, and barycenters
+        invariant — coalition formation sees geometry, not indices."""
+        if not fused and backend != "xla":
+            pytest.skip("composed reference path is checked on xla")
+        w = _rand_w(seed)
+        state = coalitions.init_centers(jax.random.key(seed), w, K)
+        rng = np.random.default_rng(seed + 1)
+        perm = jnp.asarray(rng.permutation(N))
+        inv = jnp.argsort(perm)                    # old index -> new position
+        w2 = w[perm]
+        state2 = CoalitionState(center_idx=inv[state.center_idx],
+                                round=state.round)
+        r1 = coalitions.run_round(w, state, backend=backend, fused=fused)
+        r2 = coalitions.run_round(w2, state2, backend=backend, fused=fused)
+        np.testing.assert_array_equal(
+            np.asarray(r2.assignment), np.asarray(r1.assignment)[perm])
+        np.testing.assert_array_equal(np.asarray(r2.counts),
+                                      np.asarray(r1.counts))
+        np.testing.assert_allclose(np.asarray(r2.barycenters),
+                                   np.asarray(r1.barycenters),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(r2.theta), np.asarray(r1.theta),
+                                   rtol=1e-4, atol=1e-5)
+        # Medoid election is equivariant only up to exact ties (both members
+        # of a 2-client coalition are equidistant from their barycenter, and
+        # argmin breaks such ties by position) — the permutation-invariant
+        # law is that each elected medoid ATTAINS the minimal distance to
+        # its barycenter among the coalition's members.
+        wn, w2n = np.asarray(w), np.asarray(w2)
+        for j in range(K):
+            d1 = ((wn[np.asarray(r1.new_center_idx)[j]]
+                   - np.asarray(r1.barycenters)[j]) ** 2).sum()
+            d2 = ((w2n[np.asarray(r2.new_center_idx)[j]]
+                   - np.asarray(r2.barycenters)[j]) ** 2).sum()
+            np.testing.assert_allclose(d1, d2, rtol=1e-3, atol=1e-5)
+
+    @pytest.mark.parametrize("name", ["fedavg", "fedavg_trimmed"])
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=5, deadline=None)
+    def test_flat_rules_permutation_invariant(self, name, seed):
+        w = _rand_w(seed)
+        rng = np.random.default_rng(seed + 1)
+        perm = jnp.asarray(rng.permutation(N))
+        s = _make(name, "xla")
+        st0 = s.init_state(jax.random.key(seed), w)
+        np.testing.assert_allclose(
+            np.asarray(s.round(w[perm], st0).theta),
+            np.asarray(s.round(w, st0).theta), rtol=1e-5, atol=1e-6)
+
+
+# --- staleness-weight monotonicity -------------------------------------------------
+
+class TestStalenessMonotonicity:
+    @given(alpha=st.floats(min_value=0.05, max_value=3.0),
+           seed=st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_decreasing_in_tau(self, alpha, seed):
+        """Older updates never outweigh fresher ones — in rounds
+        (semi_async integers) or simulated seconds (event_driven floats)."""
+        rng = np.random.default_rng(seed)
+        tau = jnp.asarray(np.sort(rng.uniform(0.0, 1e4, 16))
+                          .astype(np.float32))
+        v = np.asarray(sim.staleness_weights(tau, alpha))
+        assert v[0] <= 1.0 and (v > 0).all()
+        assert (np.diff(v) <= 0).all()
+        dup = np.unique(np.asarray(tau))
+        if dup.size > 1:                           # strict where tau differs
+            vs = np.asarray(sim.staleness_weights(jnp.asarray(dup), alpha))
+            assert (np.diff(vs) < 0).all()
+
+    @given(tau=st.floats(min_value=0.5, max_value=1e4),
+           lo=st.floats(min_value=0.0, max_value=1.0),
+           hi=st.floats(min_value=1.01, max_value=4.0))
+    @settings(max_examples=20, deadline=None)
+    def test_decreasing_in_alpha_and_fresh_identity(self, tau, lo, hi):
+        t = jnp.asarray([0.0, tau], jnp.float32)
+        w_lo = np.asarray(sim.staleness_weights(t, lo))
+        w_hi = np.asarray(sim.staleness_weights(t, hi))
+        assert w_lo[0] == 1.0 and w_hi[0] == 1.0   # tau=0 exactly unweighted
+        assert w_hi[1] < w_lo[1]                   # stronger decay
+
+
+# --- engine equivalence on the identity substrate ----------------------------------
+
+_ENGINE_FEDS: dict[str, tuple] = {}
+
+
+def _engine_problem(method: str):
+    """One cached Federation per strategy: the jitted engines compile once
+    and every drawn example re-executes the compiled programs."""
+    if method not in _ENGINE_FEDS:
+        n, l, d = 5, 12, 8
+        cfg = FederationConfig(
+            n_clients=n, n_coalitions=2, rounds=3, method=method,
+            client=ClientConfig(epochs=1, batch_size=6, lr=0.05),
+            sim=sim.SimConfig(fleet="ideal"))
+        loss_fn = lambda p, b: jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+        eval_fn = lambda p: -jnp.sum(p["w"] ** 2)
+        _ENGINE_FEDS[method] = (Federation(loss_fn, eval_fn, cfg), n, l, d)
+    return _ENGINE_FEDS[method]
+
+
+class TestEngineEquivalence:
+    @pytest.mark.parametrize("method", STRATEGIES)
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=3, deadline=None)
+    def test_all_engines_agree_on_identity_substrate(self, method, seed):
+        """scan / python / semi_async / event_driven are one federation on
+        the ideal fleet with unbounded energy, for any data and key."""
+        fed, n, l, d = _engine_problem(method)
+        rng = np.random.default_rng(seed)
+        cd = {"x": jnp.asarray(rng.standard_normal((n, l, d)),
+                               dtype=jnp.float32),
+              "y": jnp.asarray(rng.standard_normal((n, l)),
+                               dtype=jnp.float32)}
+        params = {"w": jnp.asarray(rng.standard_normal(d), jnp.float32)}
+        key = jax.random.key(seed)
+        results = {e: fed.run(params, cd, key, engine=e)
+                   for e in ("scan", "python", "semi_async", "event_driven")}
+        gp_ref, h_ref = results["scan"]
+        for engine, (gp, hist) in results.items():
+            np.testing.assert_array_equal(
+                np.asarray(gp_ref["w"]), np.asarray(gp["w"]), err_msg=engine)
+            for field in ("loss", "acc", "assignment", "counts"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(h_ref.trace, field)),
+                    np.asarray(getattr(hist.trace, field)),
+                    err_msg=f"{engine}:{field}")

@@ -9,7 +9,7 @@ import pytest
 from repro import sim
 from repro.core import aggregation, coalitions, strategies
 from repro.core.client import ClientConfig
-from repro.core.server import Federation, FederationConfig
+from repro.core.server import Federation, FederationConfig, bytes_per_param
 
 N_CLIENTS, N_LOCAL, DIM = 6, 20, 12
 
@@ -167,6 +167,51 @@ class TestClock:
         _, wan, _ = sim.round_stats(mask, jnp.zeros((10,)), 4000, n_groups=3,
                                     hierarchical=True)
         assert float(wan) == 1 * 2 * 4000
+
+    def test_missed_rounds_burn_the_deadline(self):
+        """Regression: under a finite deadline the server cannot close a
+        round early unless EVERY device reported (an offline device is
+        indistinguishable from a late one), so both an all-miss round and a
+        partially-missed one must charge the full deadline to the clock —
+        never a free (or discounted) round that claims progress the server
+        didn't pay for."""
+        t = jnp.array([5.0, 7.0, 9.0])
+        empty = jnp.zeros((3,), bool)
+        sim_t, wan, edge = sim.round_stats(empty, t, 4000, n_groups=2,
+                                           hierarchical=False, deadline=4.0)
+        assert float(sim_t) == 4.0
+        assert float(wan) == 0.0 and float(edge) == 0.0
+        # a partially-missed round waits for the absentee until the deadline
+        some = jnp.array([True, True, False])
+        sim_t, _, _ = sim.round_stats(some, t, 4000, n_groups=2,
+                                      hierarchical=False, deadline=8.0)
+        assert float(sim_t) == 8.0
+        # a full round closes at its slowest participant
+        full = jnp.ones((3,), bool)
+        sim_t, _, _ = sim.round_stats(full, t, 4000, n_groups=2,
+                                      hierarchical=False, deadline=20.0)
+        assert float(sim_t) == 9.0
+        # with no deadline there is no defined waiting period
+        sim_t, _, _ = sim.round_stats(empty, t, 4000, n_groups=2,
+                                      hierarchical=False)
+        assert float(sim_t) == 0.0
+        sim_t, _, _ = sim.round_stats(some, t, 4000, n_groups=2,
+                                      hierarchical=False)
+        assert float(sim_t) == 7.0
+
+    def test_engine_empty_round_clock_advances_by_deadline(self, lsq):
+        """End-to-end: under a tight deadline the semi_async engine's
+        all-miss rounds charge the deadline to the simulated clock."""
+        loss_fn, eval_fn, cd, params = lsq
+        deadline = 1e-4                      # everything misses on uniform
+        fed = Federation(loss_fn, eval_fn,
+                         _cfg(method="fedavg", rounds=4, engine="semi_async",
+                              fleet="uniform", seed=0, deadline=deadline))
+        _, hist = fed.run(params, cd, jax.random.key(0))
+        part = np.asarray(hist.trace.participation)
+        assert part[0].all() and not part[1:].any()
+        np.testing.assert_allclose(np.asarray(hist.trace.sim_time)[1:],
+                                   deadline, rtol=1e-6)
 
 
 # --- the masked strategy contract -------------------------------------------------
@@ -360,6 +405,48 @@ class TestSemiAsyncEngine:
                 < hist.trace.participation.size    # stalenesses occurred
             thetas.append(np.asarray(gp["w"]))
         assert not np.array_equal(thetas[0], thetas[1])
+
+
+# --- wire-byte accounting is dtype-consistent across Trace and comm_cost ----------
+
+class TestWireByteDtypeConsistency:
+    """The live Trace accounting (``round_stats`` fed with
+    ``D * bytes_per_param(w)``) and the static ``benchmarks/comm_cost``
+    table must agree for any on-wire dtype — a bf16 deployment halves the
+    bytes in BOTH places or the comparison is meaningless."""
+
+    N, D, K = 6, 1000, 3
+
+    @pytest.mark.parametrize("dtype,expect_bpp",
+                             [("float32", 4), ("bfloat16", 2)])
+    def test_flat_and_hierarchical_split(self, dtype, expect_bpp):
+        w = jnp.zeros((self.N, self.D), jnp.dtype(dtype))
+        bpp = bytes_per_param(w)
+        assert bpp == expect_bpp
+        model_bytes = self.D * bpp                 # the engines' derivation
+        mask = jnp.ones((self.N,), bool)
+        t = jnp.zeros((self.N,))
+        _, wan, edge = sim.round_stats(mask, t, model_bytes,
+                                       n_groups=self.K, hierarchical=False)
+        ref = aggregation.comm_fedavg(self.N, self.D, bpp)
+        assert float(wan) == ref.wan_up + ref.wan_down
+        assert float(edge) == 0.0
+        _, wan, edge = sim.round_stats(mask, t, model_bytes,
+                                       n_groups=self.K, hierarchical=True)
+        ref = aggregation.comm_coalition(self.N, self.K, self.D, bpp)
+        assert float(wan) == ref.wan_up + ref.wan_down
+        assert float(edge) == ref.edge_up + ref.edge_down
+
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    def test_comm_cost_table_accepts_dtype(self, dtype):
+        from benchmarks.comm_cost import dtype_bytes, table
+
+        bpp = dtype_bytes(dtype)
+        assert bpp == bytes_per_param(jnp.zeros((1,), jnp.dtype(dtype)))
+        row = table(n_clients=self.N, k=self.K, bytes_per_param=bpp)[0]
+        # the table's WAN columns scale with the dtype's wire bytes
+        assert row["fedavg_wan_up_MB"] == self.N * row["params"] * bpp / 1e6
+        assert row["coalition_wan_up_MB"] == self.K * row["params"] * bpp / 1e6
 
 
 # --- comm_cost satellite ----------------------------------------------------------
