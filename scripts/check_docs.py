@@ -1,0 +1,168 @@
+#!/usr/bin/env python
+"""Docs checker (CI: the "docs check" step).
+
+Three checks over README.md and docs/*.md, no Sphinx required:
+
+1. **Links** — every internal markdown link target (relative path, resolved
+   from the file containing it) must exist.
+2. **CLI flags** — every ``--flag`` inside a fenced ``bash`` command that
+   invokes a module with a known parser (``repro.launch.train``,
+   ``benchmarks.run``) must be an option that parser actually accepts, so
+   docs can never reference a flag that was renamed away.
+3. **Quickstart** (``--run-quickstart``) — the commands in README.md fenced
+   blocks under a "Quickstart" heading are executed *as written* from the
+   repo root; they are required to be smoke-scale.
+
+Usage:
+    PYTHONPATH=src python scripts/check_docs.py [--run-quickstart]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import shlex
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+# `python scripts/check_docs.py` puts scripts/ on sys.path, not the repo
+# root; the parser imports below need the root (benchmarks/) and src/
+sys.path[:0] = [str(ROOT), str(ROOT / "src")]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+
+#: module -> zero-arg factory returning its argparse parser
+KNOWN_PARSERS = {
+    "repro.launch.train": lambda: __import__(
+        "repro.launch.train", fromlist=["build_parser"]).build_parser(),
+    "benchmarks.run": lambda: __import__(
+        "benchmarks.run", fromlist=["build_parser"]).build_parser(),
+}
+
+
+def md_files() -> list[Path]:
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_links(path: Path, text: str, errors: list[str]) -> None:
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "#", "mailto:")):
+            continue
+        rel = target.split("#")[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link -> {target}")
+
+
+def fenced_blocks(text: str) -> list[tuple[str, str, str]]:
+    """Yield (language, section_heading, block_text) for each fenced block."""
+    blocks, lang, buf, section = [], None, [], ""
+    for line in text.splitlines():
+        m = FENCE_RE.match(line)
+        if m is not None:
+            if lang is None:
+                lang = m.group(1)
+            else:
+                blocks.append((lang, section, "\n".join(buf)))
+                lang, buf = None, []
+            continue
+        h = HEADING_RE.match(line)
+        if h is not None and lang is None:
+            section = h.group(2).strip()
+        if lang is not None:
+            buf.append(line)
+    return blocks
+
+
+def commands(block: str) -> list[str]:
+    """Join backslash continuations; keep non-comment, non-empty lines."""
+    joined = re.sub(r"\\\n\s*", " ", block)
+    return [ln.strip() for ln in joined.splitlines()
+            if ln.strip() and not ln.strip().startswith("#")]
+
+
+def known_module(cmd: str) -> str | None:
+    toks = shlex.split(cmd)
+    for i, t in enumerate(toks):
+        if t == "-m" and i + 1 < len(toks):
+            return toks[i + 1] if toks[i + 1] in KNOWN_PARSERS else None
+    return None
+
+
+def check_flags(path: Path, text: str, errors: list[str]) -> None:
+    parser_flags: dict[str, set[str]] = {}
+    for lang, _, block in fenced_blocks(text):
+        if lang not in ("bash", "sh", "console", ""):
+            continue
+        for cmd in commands(block):
+            mod = known_module(cmd)
+            if mod is None:
+                continue
+            if mod not in parser_flags:
+                parser_flags[mod] = set(
+                    KNOWN_PARSERS[mod]()._option_string_actions)
+            for tok in shlex.split(cmd):
+                flag = tok.split("=")[0]
+                if flag.startswith("--") and \
+                        flag not in parser_flags[mod]:
+                    errors.append(
+                        f"{path.relative_to(ROOT)}: `{flag}` is not a flag "
+                        f"of `python -m {mod}` (in: {cmd[:60]}...)")
+
+
+def run_quickstart(errors: list[str]) -> None:
+    text = (ROOT / "README.md").read_text()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"src{os.pathsep}{env.get('PYTHONPATH', '')}"
+    ran = 0
+    for lang, section, block in fenced_blocks(text):
+        if lang not in ("bash", "sh") or "quickstart" not in section.lower():
+            continue
+        for cmd in commands(block):
+            print(f"$ {cmd}", flush=True)
+            ran += 1
+            try:
+                proc = subprocess.run(cmd, shell=True, cwd=ROOT, env=env,
+                                      timeout=900)
+            except subprocess.TimeoutExpired:
+                errors.append(
+                    f"README.md quickstart command timed out (900s): {cmd}")
+                continue
+            if proc.returncode != 0:
+                errors.append(
+                    f"README.md quickstart command failed "
+                    f"(exit {proc.returncode}): {cmd}")
+    if ran == 0:
+        errors.append("README.md: no runnable Quickstart commands found")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--run-quickstart", action="store_true",
+                    help="also execute README Quickstart commands as written")
+    args = ap.parse_args()
+
+    errors: list[str] = []
+    for path in md_files():
+        text = path.read_text()
+        check_links(path, text, errors)
+        check_flags(path, text, errors)
+    print(f"checked {len(md_files())} markdown files (links + CLI flags)")
+    if args.run_quickstart:
+        run_quickstart(errors)
+
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

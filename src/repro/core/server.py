@@ -235,6 +235,14 @@ class Federation:
             raise ValueError(
                 f"unknown fleet profile {cfg.sim.fleet!r}; registered "
                 f"profiles: {sim_mod.available_fleets()}")
+        if cfg.sim.scenario not in sim_mod.available_scenarios():
+            raise ValueError(
+                f"unknown scenario {cfg.sim.scenario!r}; registered "
+                f"scenarios: {sim_mod.available_scenarios()}")
+        if not 0.0 <= cfg.sim.rho <= 1.0:           # also rejects NaN
+            raise ValueError(
+                f"rho={cfg.sim.rho} must be in [0, 1] (fleet-data coupling "
+                f"strength; 0 = independent sampling)")
         if not cfg.sim.energy_budget >= 0:          # also rejects NaN
             raise ValueError(
                 f"energy_budget={cfg.sim.energy_budget} must be >= 0 "

@@ -1,16 +1,33 @@
-"""Federated data partitioners — the paper's three regimes (§IV.A/B).
+"""Federated data partitioners — the paper's three regimes (§IV.A/B) plus a
+quantity-skew variant, behind a registry.
 
   ``iid``       — each client gets an equal, class-balanced shard
                   (paper: 600 samples/class/client).
   ``dirichlet`` — label proportions per client ~ Dir(alpha); the paper's
                   "heterogeneous" regime (moderate alpha).
-  ``shards``    — sort-by-label pathological split, ``shards_per_client``
+  ``shard``     — sort-by-label pathological split, ``shards_per_client``
                   classes each; the paper's "highly heterogeneous" regime.
+  ``quantity``  — label-balanced draw but client *unique*-sample counts
+                  ~ Dir(beta): data-poor clients are padded back to the
+                  common shard size by resampling their own pool, so the
+                  equal-shape contract holds while effective dataset sizes
+                  differ (the quantity-skew axis of Li et al.'s splitter
+                  taxonomy).
+
+Partitioners are a registry, mirroring the strategy/backend/fleet
+registries::
+
+    @register_partitioner("my-split")
+    def _split(labels, n_clients, seed=0, **kw) -> np.ndarray: ...
+
+    idx = partition("my-split", labels, n_clients, seed=0)
 
 All partitioners return an ``(n_clients, n_local)`` index matrix with equal
 shard sizes (required for the vmapped ClientUpdate), trimming the remainder.
 """
 from __future__ import annotations
+
+from typing import Callable
 
 import numpy as np
 
@@ -27,6 +44,32 @@ def _equalize(parts: list[np.ndarray], n_local: int, rng) -> np.ndarray:
     return np.stack(out)
 
 
+_PARTITIONERS: dict[str, Callable[..., np.ndarray]] = {}
+
+#: legacy alias — older call sites iterate/index ``REGIMES`` directly.
+REGIMES = _PARTITIONERS
+
+
+def register_partitioner(name: str) -> Callable:
+    """Decorator: register a partitioner under ``name``.
+
+    The partitioner receives ``(labels, n_clients, seed=..., **kw)`` and
+    returns an ``(n_clients, n_local)`` integer index matrix; it must be a
+    pure function of its arguments so splits are reproducible.
+    """
+
+    def deco(fn: Callable[..., np.ndarray]) -> Callable[..., np.ndarray]:
+        _PARTITIONERS[name] = fn
+        return fn
+
+    return deco
+
+
+def available_regimes() -> tuple[str, ...]:
+    return tuple(sorted(_PARTITIONERS))
+
+
+@register_partitioner("iid")
 def iid(labels: np.ndarray, n_clients: int, seed: int = 0) -> np.ndarray:
     rng = np.random.default_rng(seed)
     n_local = len(labels) // n_clients
@@ -44,6 +87,7 @@ def iid(labels: np.ndarray, n_clients: int, seed: int = 0) -> np.ndarray:
     return _equalize(parts, per_class * len(classes), rng)
 
 
+@register_partitioner("dirichlet")
 def dirichlet(labels: np.ndarray, n_clients: int, alpha: float = 0.5,
               seed: int = 0) -> np.ndarray:
     rng = np.random.default_rng(seed)
@@ -74,6 +118,7 @@ def dirichlet(labels: np.ndarray, n_clients: int, alpha: float = 0.5,
     return _equalize(parts, n_local, rng)
 
 
+@register_partitioner("shard")
 def shards(labels: np.ndarray, n_clients: int, shards_per_client: int = 2,
            seed: int = 0) -> np.ndarray:
     rng = np.random.default_rng(seed)
@@ -91,11 +136,36 @@ def shards(labels: np.ndarray, n_clients: int, shards_per_client: int = 2,
     return _equalize(parts, min(n_local, shards_per_client * shard_size), rng)
 
 
-REGIMES = {"iid": iid, "dirichlet": dirichlet, "shard": shards}
+@register_partitioner("quantity")
+def quantity(labels: np.ndarray, n_clients: int, beta: float = 0.5,
+             seed: int = 0) -> np.ndarray:
+    """Quantity skew: per-client *unique*-sample counts ~ Dir(beta).
+
+    Each client draws ``counts[i]`` unique indices from a label-shuffled
+    pool (so the label marginal stays roughly balanced) and is then padded
+    back to the common ``n_local`` by resampling its own pool via
+    :func:`_equalize`.  Data-poor clients therefore train on many duplicate
+    samples — effectively a smaller dataset — without breaking the equal
+    ``(n_clients, n_local)`` shape the vmapped ClientUpdate requires.
+    Smaller ``beta`` = heavier skew.
+    """
+    rng = np.random.default_rng(seed)
+    n_local = len(labels) // n_clients
+    props = rng.dirichlet(beta * np.ones(n_clients))
+    counts = np.clip(np.floor(props * n_local * n_clients).astype(int),
+                     1, n_local)
+    pool = rng.permutation(len(labels))
+    bounds = np.concatenate([[0], np.cumsum(counts)])
+    # modulo wrap: the min-1 clip can push the cursor past the pool end on
+    # extreme draws; wrapping keeps every client non-empty
+    parts = [pool[np.arange(bounds[i], bounds[i + 1]) % len(pool)]
+             for i in range(n_clients)]
+    return _equalize(parts, n_local, rng)
 
 
 def partition(regime: str, labels: np.ndarray, n_clients: int, seed: int = 0,
               **kw) -> np.ndarray:
-    if regime not in REGIMES:
-        raise ValueError(f"unknown regime {regime!r}; choose from {sorted(REGIMES)}")
-    return REGIMES[regime](labels, n_clients, seed=seed, **kw)
+    if regime not in _PARTITIONERS:
+        raise ValueError(
+            f"unknown regime {regime!r}; choose from {sorted(_PARTITIONERS)}")
+    return _PARTITIONERS[regime](labels, n_clients, seed=seed, **kw)

@@ -13,6 +13,9 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train --mode fl --method coalition \
       --engine event_driven --fleet cellular-flaky --energy-budget 50 \
       --max-events 80
+  PYTHONPATH=src python -m repro.launch.train --mode fl --method coalition \
+      --engine semi_async --fleet cellular-flaky --scenario correlated-skew \
+      --regime dirichlet --rho 1.0 --rounds 20
   PYTHONPATH=src python -m repro.launch.train --mode pretrain \
       --arch hymba-1.5b --reduced --steps 200
 """
@@ -27,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import strategies
+from repro.data import partition
 
 
 # which strategies actually consume each CLI hyper-parameter — factories
@@ -61,7 +65,7 @@ def run_fl(args) -> dict:
     from repro import sim
     from repro.core.client import ClientConfig
     from repro.core.server import Federation, FederationConfig
-    from repro.data import loader, partition, synthetic
+    from repro.data import loader, synthetic
     from repro.models import cnn
 
     data = synthetic.mnist_idx()
@@ -71,8 +75,15 @@ def run_fl(args) -> dict:
                 synthetic.digits(args.n_test, seed=1))
         source = "synthetic-digits"
     (xtr, ytr), (xte, yte) = data
-    idx = partition.partition(args.regime, ytr, args.clients, seed=args.seed)
-    cd = jax.tree.map(jnp.asarray, loader.client_datasets(xtr, ytr, idx))
+    # Joint fleet+data sampling: the scenario permutes which device holds
+    # which shard (rho=0 == the independent sampling, bit-for-bit); the
+    # engine re-samples the identical fleet from cfg.sim.fleet/seed.
+    scn = sim.make_scenario(args.scenario, ytr, args.clients,
+                            fleet=args.fleet, regime=args.regime,
+                            rho=args.rho, seed=args.seed,
+                            sim_seed=args.sim_seed)
+    cd = jax.tree.map(jnp.asarray,
+                      loader.client_datasets(xtr, ytr, scn.index_matrix))
     xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
 
     extras = _strategy_extras(args)
@@ -89,7 +100,8 @@ def run_fl(args) -> dict:
                           staleness_alpha=args.staleness,
                           deadline=args.deadline,
                           energy_budget=args.energy_budget,
-                          max_events=args.max_events, seed=args.sim_seed))
+                          max_events=args.max_events, seed=args.sim_seed,
+                          scenario=args.scenario, rho=args.rho))
     params = cnn.init(jax.random.key(args.seed))
     t0 = time.time()
     fed = Federation(cnn.loss_fn, lambda p: cnn.accuracy(p, xte_j, yte_j),
@@ -97,6 +109,8 @@ def run_fl(args) -> dict:
     _, hist = fed.run(params, cd, jax.random.key(args.seed + 1))
     out = {"mode": "fl", "method": args.method, "engine": args.engine,
            "regime": args.regime,
+           "scenario": args.scenario, "rho": args.rho,
+           "scenario_spearman": round(scn.metadata["spearman"], 4),
            "source": source, "rounds": hist.rounds,
            "strategy_extras": {k: (v.tolist() if hasattr(v, "tolist") else v)
                                for k, v in extras.items()},
@@ -170,14 +184,14 @@ def run_pretrain(args) -> dict:
     return out
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mode", default="fl", choices=["fl", "pretrain"])
     # fl
     ap.add_argument("--method", default="coalition",
                     choices=sorted(strategies.available_strategies()))
     ap.add_argument("--regime", default="iid",
-                    choices=["iid", "dirichlet", "shard"])
+                    choices=sorted(partition.available_regimes()))
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--coalitions", type=int, default=3)
     ap.add_argument("--rounds", type=int, default=30)
@@ -219,6 +233,15 @@ def main() -> None:
                          "(default: rounds - 1)")
     ap.add_argument("--sim-seed", type=int, default=0,
                     help="fleet sampling seed")
+    # fl: joint fleet+data scenarios (repro.sim.scenarios)
+    ap.add_argument("--scenario", default="independent",
+                    help="joint fleet+data scenario (see "
+                         "repro.sim.available_scenarios): 'independent' is "
+                         "today's decoupled sampling; 'correlated-skew' "
+                         "hands weak devices the most label-skewed shards")
+    ap.add_argument("--rho", type=float, default=0.0,
+                    help="fleet-data coupling strength in [0, 1]; 0 "
+                         "reproduces independent sampling bit-for-bit")
     # pretrain
     ap.add_argument("--arch", default="hymba-1.5b")
     ap.add_argument("--reduced", action="store_true")
@@ -232,7 +255,11 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     if args.flash:
         from repro.models.layers import set_flash_kernel

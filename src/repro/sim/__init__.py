@@ -26,6 +26,15 @@ the WAN; coalition rules ship members to heads over the edge and only the
 barycenters over the WAN).  Staleness decay ``(1 + tau)^-alpha`` for late
 updates also lives here.
 
+**Scenarios** (:mod:`repro.sim.scenarios`) — joint sampling of the device
+fleet and the *data partition*: a registered scenario produces a
+``(DeviceFleet, index_matrix, metadata)`` triple from one seed, with a
+coupling knob ``rho`` linking per-device availability/compute/energy rank to
+per-shard label-skew (or data-quantity) rank.  ``rho = 0`` reproduces the
+independent fleet + partition sampling bit-for-bit; ``rho = 1`` hands the
+weakest devices the most skewed shards — the regime where censoring drops
+minority-label knowledge.
+
 The ``semi_async`` engine (:mod:`repro.core.server`) composes the three
 inside one ``jax.lax.scan`` program: absent clients keep their last
 delivered update buffered, staleness-decayed, and every registered
@@ -50,19 +59,30 @@ from repro.sim.clock import (device_event_energy, device_round_time,
                              round_stats, staleness_weights)
 from repro.sim.devices import (DeviceFleet, SimConfig, available_fleets,
                                make_fleet, register_fleet)
+from repro.sim.scenarios import (Scenario, available_scenarios,
+                                 capability_rank, label_skew_rank,
+                                 make_scenario, quantity_rank,
+                                 register_scenario)
 
 __all__ = [
     "AVAILABILITY_STREAM",
     "AvailabilityState",
     "DeviceFleet",
+    "Scenario",
     "SimConfig",
     "available_fleets",
+    "available_scenarios",
+    "capability_rank",
     "device_event_energy",
     "device_round_time",
     "effective_p",
     "init_availability",
+    "label_skew_rank",
     "make_fleet",
+    "make_scenario",
+    "quantity_rank",
     "register_fleet",
+    "register_scenario",
     "round_stats",
     "sample_mask",
     "staleness_weights",

@@ -68,6 +68,14 @@ class SimConfig(NamedTuple):
                           shape exactly.
     ``seed``            — fleet-sampling seed (device table + availability
                           stream are functions of this and the run key).
+    ``scenario``        — registered joint fleet+data scenario name
+                          (:mod:`repro.sim.scenarios`); the engines never
+                          read it (coupling happens at data-assembly time by
+                          permuting the index matrix), but it is validated
+                          at :class:`~repro.core.server.Federation`
+                          construction and recorded for provenance.
+    ``rho``             — fleet-data coupling strength in [0, 1]; 0 is the
+                          independent (identity) regime.
     """
 
     fleet: str = "ideal"
@@ -78,6 +86,8 @@ class SimConfig(NamedTuple):
     energy_budget: float = float("inf")
     max_events: int | None = None
     seed: int = 0
+    scenario: str = "independent"
+    rho: float = 0.0
 
 
 class DeviceFleet(NamedTuple):

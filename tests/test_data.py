@@ -1,0 +1,156 @@
+"""repro.data coverage: the partitioner registry, the `_equalize`
+resample-pad path under extreme Dirichlet draws, shard determinism,
+`label_histogram` correctness, and the regime-dispatch regressions."""
+import numpy as np
+import pytest
+
+from repro.data import loader, partition
+
+
+def _labels(n=1200, n_classes=10, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, n_classes, size=n).astype(np.int32)
+
+
+# --- registry ---------------------------------------------------------------------
+
+class TestRegistry:
+    def test_builtin_regimes_registered(self):
+        for name in ("iid", "dirichlet", "shard", "quantity"):
+            assert name in partition.available_regimes()
+
+    def test_unknown_regime_lists_options(self):
+        with pytest.raises(ValueError, match="unknown regime"):
+            partition.partition("zipf", _labels(), 4)
+
+    def test_register_roundtrip(self):
+        @partition.register_partitioner("_test_split")
+        def _split(labels, n_clients, seed=0):
+            n_local = len(labels) // n_clients
+            return np.arange(n_clients * n_local).reshape(n_clients, n_local)
+
+        try:
+            assert "_test_split" in partition.available_regimes()
+            idx = partition.partition("_test_split", _labels(), 4)
+            assert idx.shape == (4, 300)
+        finally:
+            del partition._PARTITIONERS["_test_split"]
+
+    def test_legacy_regimes_alias_is_registry(self):
+        # older call sites iterate REGIMES directly (paper_figures.py)
+        assert partition.REGIMES is partition._PARTITIONERS
+
+    def test_shard_regime_dispatches_to_shards(self):
+        """Regression: regime='shard' must be the `shards` implementation."""
+        y = _labels()
+        np.testing.assert_array_equal(
+            partition.partition("shard", y, 6, seed=3, shards_per_client=2),
+            partition.shards(y, 6, shards_per_client=2, seed=3))
+
+    @pytest.mark.parametrize("regime", ["iid", "dirichlet", "shard",
+                                        "quantity"])
+    def test_partition_matches_direct_call(self, regime):
+        y = _labels()
+        fn = {"iid": partition.iid, "dirichlet": partition.dirichlet,
+              "shard": partition.shards, "quantity": partition.quantity}
+        np.testing.assert_array_equal(
+            partition.partition(regime, y, 5, seed=2), fn[regime](y, 5, seed=2))
+
+
+# --- _equalize --------------------------------------------------------------------
+
+class TestEqualize:
+    def test_trim(self):
+        parts = [np.arange(15), np.arange(20, 40)]
+        out = partition._equalize(parts, 12, np.random.default_rng(0))
+        assert out.shape == (2, 12)
+        np.testing.assert_array_equal(out[0], np.arange(12))
+
+    def test_pad_resamples_own_pool(self):
+        parts = [np.array([3, 7]), np.arange(10, 22)]
+        out = partition._equalize(parts, 12, np.random.default_rng(0))
+        assert out.shape == (2, 12)
+        np.testing.assert_array_equal(out[0][:2], [3, 7])   # originals kept
+        assert set(out[0]) <= {3, 7}                        # pad from own pool
+        np.testing.assert_array_equal(out[1], np.arange(10, 22))
+
+    def test_extreme_dirichlet_hits_pad_path(self):
+        """alpha -> 0 concentrates shards on one class; once a class pool is
+        exhausted the per-client list can come up short and must be padded
+        back to exactly n_local by resampling."""
+        y = _labels(n=600, seed=1)
+        idx = partition.dirichlet(y, 10, alpha=0.01, seed=4)
+        assert idx.shape == (10, 60)
+        assert idx.min() >= 0 and idx.max() < 600
+        # extreme alpha => most clients are (near-)single-class
+        hist = loader.label_histogram(y, idx)
+        top_share = hist.max(axis=1) / hist.sum(axis=1)
+        assert np.median(top_share) > 0.9
+
+
+# --- shards determinism -----------------------------------------------------------
+
+class TestShards:
+    def test_deterministic_in_seed(self):
+        y = _labels()
+        np.testing.assert_array_equal(
+            partition.shards(y, 8, shards_per_client=2, seed=11),
+            partition.shards(y, 8, shards_per_client=2, seed=11))
+
+    def test_different_seed_differs(self):
+        y = _labels()
+        a = partition.shards(y, 8, shards_per_client=2, seed=0)
+        b = partition.shards(y, 8, shards_per_client=2, seed=1)
+        assert not np.array_equal(a, b)
+
+    def test_each_client_sees_few_classes(self):
+        y = np.repeat(np.arange(10), 120).astype(np.int32)
+        idx = partition.shards(y, 10, shards_per_client=2, seed=0)
+        hist = loader.label_histogram(y, idx)
+        assert ((hist > 0).sum(axis=1) <= 3).all()   # ~2 classes (+boundary)
+
+
+# --- quantity skew ----------------------------------------------------------------
+
+class TestQuantity:
+    def test_shape_and_validity(self):
+        y = _labels()
+        idx = partition.quantity(y, 6, beta=0.5, seed=0)
+        assert idx.shape == (6, 200)
+        assert idx.min() >= 0 and idx.max() < len(y)
+
+    def test_unique_counts_are_skewed(self):
+        y = _labels()
+        idx = partition.quantity(y, 6, beta=0.3, seed=0)
+        uniq = np.array([len(np.unique(r)) for r in idx])
+        assert uniq.max() > 2 * uniq.min()       # real quantity spread
+        assert uniq.max() <= 200
+
+    def test_deterministic(self):
+        y = _labels()
+        np.testing.assert_array_equal(partition.quantity(y, 6, seed=5),
+                                      partition.quantity(y, 6, seed=5))
+
+
+# --- label_histogram --------------------------------------------------------------
+
+class TestLabelHistogram:
+    def test_known_counts(self):
+        y = np.array([0, 0, 1, 2, 2, 2], np.int32)
+        idx = np.array([[0, 1, 2], [3, 4, 5]])
+        hist = loader.label_histogram(y, idx, n_classes=3)
+        np.testing.assert_array_equal(hist, [[2, 1, 0], [0, 0, 3]])
+
+    def test_rows_sum_to_n_local(self):
+        y = _labels()
+        idx = partition.partition("dirichlet", y, 7, seed=0)
+        hist = loader.label_histogram(y, idx)
+        np.testing.assert_array_equal(hist.sum(axis=1), idx.shape[1])
+
+    def test_counts_duplicates(self):
+        """Resample-padded rows count duplicated samples once per occurrence
+        (the histogram reflects the training distribution, not the pool)."""
+        y = np.array([0, 1], np.int32)
+        idx = np.array([[0, 0, 0, 1]])
+        np.testing.assert_array_equal(
+            loader.label_histogram(y, idx, n_classes=2), [[3, 1]])

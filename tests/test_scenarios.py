@@ -1,0 +1,197 @@
+"""Fleet-aware scenario tests: the registry, the rank-coupling machinery,
+and the acceptance invariant — the rho=0 scenario reproduces the independent
+fleet+partition sampling bit-for-bit on all four engines, per strategy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sim
+from repro.core.client import ClientConfig
+from repro.core.server import Federation, FederationConfig
+from repro.data import loader, partition
+
+N_CLIENTS, N_LOCAL, DIM = 6, 8, 4
+N_SAMPLES = N_CLIENTS * N_LOCAL * 4
+
+
+def _labels(seed=0):
+    return np.random.default_rng(seed).integers(
+        0, 10, size=N_SAMPLES).astype(np.int32)
+
+
+def _scn(rho, name="correlated-skew", seed=3, sim_seed=7, **kw):
+    return sim.make_scenario(name, _labels(), N_CLIENTS,
+                             fleet="cellular-flaky", regime="dirichlet",
+                             rho=rho, seed=seed, sim_seed=sim_seed, **kw)
+
+
+# --- registry & validation --------------------------------------------------------
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        for name in ("independent", "correlated-skew", "correlated-quantity"):
+            assert name in sim.available_scenarios()
+
+    def test_unknown_scenario_lists_options(self):
+        with pytest.raises(ValueError, match="unknown scenario"):
+            sim.make_scenario("marsnet", _labels(), N_CLIENTS)
+
+    def test_rho_out_of_range(self):
+        for rho in (-0.1, 1.1, float("nan")):
+            with pytest.raises(ValueError, match="rho"):
+                _scn(rho)
+
+    def test_independent_rejects_nonzero_rho(self):
+        with pytest.raises(ValueError, match="independent"):
+            _scn(0.5, name="independent")
+
+    def test_register_roundtrip(self):
+        @sim.register_scenario("_test_scn")
+        def _make(labels, n_clients, **kw):
+            return sim.scenarios._independent(labels, n_clients, **kw)
+
+        try:
+            assert "_test_scn" in sim.available_scenarios()
+            s = sim.make_scenario("_test_scn", _labels(), N_CLIENTS)
+            assert s.index_matrix.shape[0] == N_CLIENTS
+        finally:
+            del sim.scenarios._SCENARIOS["_test_scn"]
+
+    def test_federation_validates_scenario_eagerly(self):
+        loss = lambda p, b: jnp.float32(0.0)
+        ev = lambda p: jnp.float32(0.0)
+        with pytest.raises(ValueError, match="unknown scenario"):
+            Federation(loss, ev, FederationConfig(
+                sim=sim.SimConfig(scenario="marsnet")))
+        with pytest.raises(ValueError, match="rho"):
+            Federation(loss, ev, FederationConfig(
+                sim=sim.SimConfig(rho=2.0)))
+
+
+# --- coupling machinery -----------------------------------------------------------
+
+class TestCoupling:
+    def test_deterministic(self):
+        a, b = _scn(0.7), _scn(0.7)
+        np.testing.assert_array_equal(a.index_matrix, b.index_matrix)
+        assert a.metadata == b.metadata
+
+    @pytest.mark.parametrize("rho", [0.0, 0.25, 0.5, 0.75, 1.0])
+    def test_permutation_is_valid(self, rho):
+        perm = _scn(rho).metadata["permutation"]
+        assert sorted(perm) == list(range(N_CLIENTS))
+
+    def test_rho0_permutation_is_identity(self):
+        assert _scn(0.0).metadata["permutation"] == list(range(N_CLIENTS))
+
+    def test_rho1_is_full_rank_coupling(self):
+        """At rho=1 the weakest device holds the most-skewed shard: the
+        achieved weakness-vs-skew Spearman is 1.0 (modulo rank ties)."""
+        assert _scn(1.0).metadata["spearman"] >= 0.99
+
+    def test_rho1_weakest_gets_most_skewed(self):
+        s = _scn(1.0)
+        cap = np.asarray(s.metadata["capability_rank"])
+        shard = np.asarray(s.metadata["shard_rank"])
+        perm = np.asarray(s.metadata["permutation"])
+        weakest = int(np.argmin(cap))
+        assert shard[perm[weakest]] == N_CLIENTS - 1
+
+    def test_coupling_permutes_rows_only(self):
+        """Coupling must not touch the partition itself — the permuted index
+        matrix has exactly the independent matrix's rows."""
+        ind = _scn(0.0).index_matrix
+        coupled = _scn(1.0)
+        perm = coupled.metadata["permutation"]
+        np.testing.assert_array_equal(coupled.index_matrix, ind[perm])
+
+    def test_quantity_scenario_couples_unique_counts(self):
+        s = sim.make_scenario("correlated-quantity", _labels(), N_CLIENTS,
+                              fleet="cellular-flaky", regime="quantity",
+                              rho=1.0, seed=3, sim_seed=7, beta=0.3)
+        assert s.metadata["spearman"] >= 0.99
+        cap = np.asarray(s.metadata["capability_rank"])
+        uniq = np.array([len(np.unique(r)) for r in s.index_matrix])
+        # the weakest device holds (one of) the fewest unique samples
+        assert uniq[np.argmin(cap)] == uniq.min()
+
+    def test_single_seed_defaults_sim_seed(self):
+        a = sim.make_scenario("correlated-skew", _labels(), N_CLIENTS,
+                              fleet="uniform", regime="dirichlet", rho=0.5,
+                              seed=9)
+        b = sim.make_scenario("correlated-skew", _labels(), N_CLIENTS,
+                              fleet="uniform", regime="dirichlet", rho=0.5,
+                              seed=9, sim_seed=9)
+        np.testing.assert_array_equal(a.index_matrix, b.index_matrix)
+
+    def test_spearman_helper(self):
+        assert sim.scenarios.spearman(np.arange(5), np.arange(5)) == 1.0
+        assert sim.scenarios.spearman(np.arange(5), -np.arange(5)) == -1.0
+
+
+# --- the acceptance invariant: rho=0 == independent sampling, bit-for-bit ---------
+
+class TestRhoZeroIdentity:
+    def test_fleet_and_partition_match_independent(self):
+        s = _scn(0.0)
+        np.testing.assert_array_equal(
+            s.index_matrix,
+            partition.partition("dirichlet", _labels(), N_CLIENTS, seed=3))
+        ind_fleet = sim.make_fleet("cellular-flaky", N_CLIENTS, seed=7)
+        for a, b in zip(s.fleet, ind_fleet):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_scenario_fleet_matches_engine_fleet(self):
+        """The engine re-samples its own fleet from SimConfig.fleet/seed —
+        it must be the very table the scenario returned."""
+        s = _scn(0.5)
+        fed = Federation(
+            lambda p, b: jnp.float32(0.0), lambda p: jnp.float32(0.0),
+            FederationConfig(n_clients=N_CLIENTS, sim=sim.SimConfig(
+                fleet="cellular-flaky", seed=7,
+                scenario="correlated-skew", rho=0.5)))
+        for a, b in zip(s.fleet, fed._fleet):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("engine", ["scan", "python", "semi_async",
+                                        "event_driven"])
+    @pytest.mark.parametrize("method", ["fedavg", "fedavg_weighted",
+                                        "fedavg_trimmed", "coalition",
+                                        "coalition_topk"])
+    def test_engine_bit_for_bit(self, method, engine):
+        """Federating on the rho=0 scenario's data reproduces federating on
+        independently sampled data exactly, for every strategy × engine."""
+        labels = _labels()
+        rng = np.random.default_rng(1)
+        x = rng.standard_normal((N_SAMPLES, DIM)).astype(np.float32)
+        y = labels.astype(np.float32)
+
+        scn = _scn(0.0)
+        idx_ind = partition.partition("dirichlet", labels, N_CLIENTS, seed=3)
+
+        def run(idx):
+            cd = jax.tree.map(jnp.asarray,
+                              loader.client_datasets(x, y, idx))
+            cfg = FederationConfig(
+                n_clients=N_CLIENTS, n_coalitions=2, rounds=3, method=method,
+                engine=engine,
+                client=ClientConfig(epochs=1, batch_size=4, lr=0.01),
+                sim=sim.SimConfig(fleet="cellular-flaky", seed=7,
+                                  scenario="correlated-skew", rho=0.0))
+            fed = Federation(
+                lambda p, b: jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2),
+                lambda p: -jnp.mean(p["w"] ** 2), cfg)
+            gp, hist = fed.run({"w": jnp.zeros((DIM,))}, cd,
+                               jax.random.key(5))
+            return gp, hist
+
+        gp_a, hist_a = run(scn.index_matrix)
+        gp_b, hist_b = run(idx_ind)
+        np.testing.assert_array_equal(np.asarray(gp_a["w"]),
+                                      np.asarray(gp_b["w"]))
+        for fa, fb in zip(hist_a.trace, hist_b.trace):
+            if fa is None:
+                assert fb is None
+                continue
+            np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
