@@ -357,6 +357,69 @@ def bench_correlated_skew() -> tuple[float, float]:
     return us, gap
 
 
+def bench_serve() -> tuple[float, float]:
+    """The producer/consumer serving path: a coalition federation publishes
+    round snapshots into a ModelStore, a BatchServer answers coalition-routed
+    batched queries from them and hot-swaps each newer round.  Measures
+    serving throughput (queries/s, routed through per-coalition barycenters
+    with the global-θ fallback in the batch) and swap latency (disk load +
+    install of a newer round), and asserts the two serving invariants: the
+    forward never recompiles across swaps, and the served round is the
+    store's latest.  Returns (us per served batch, queries/s); the full
+    stats land in the ``--json`` artifact as ``serve``.
+    """
+    import tempfile
+
+    from repro.serve import BatchServer, ModelStore
+
+    fed, params, cd = _tiny_federation(12, "coalition")
+    store = ModelStore(tempfile.mkdtemp(prefix="bench-serve-"))
+    fed.run(params, cd, jax.random.key(1), snapshot_every=2, store=store)
+    rounds = store.rounds()
+
+    def apply_fn(p, x):
+        return x @ p["w"]
+
+    server = BatchServer(apply_fn, store.load(rounds[0]))
+    batch = 256
+    n = fed.cfg.n_clients
+    ids = np.arange(batch) % (n + 1)
+    ids = np.where(ids == n, -1, ids)        # exercise the global fallback
+    x = jax.random.normal(jax.random.key(2), (batch, 16), jnp.float32)
+
+    us = _timeit(lambda: server.serve(ids, x))
+    compiles_before = server.compile_count
+    t0 = time.perf_counter()
+    for r in rounds[1:]:
+        server.swap(store.load(r))
+    swap_ms = (time.perf_counter() - t0) / (len(rounds) - 1) * 1e3
+    out = np.asarray(server.serve(ids, x))
+    assert server.compile_count == compiles_before, \
+        "hot swap recompiled the serving forward"
+    assert server.round == store.latest_round()
+    # routed answers come from the latest round's coalition barycenters
+    snap = store.load()
+    from repro.core import pytree as pt
+
+    routed_bitexact = True
+    for q in range(n):
+        k = int(snap.assignment[q])
+        direct = apply_fn(pt.unflatten(snap.barycenters[k],
+                                       snap.global_params), x)[q]
+        routed_bitexact &= bool(jnp.array_equal(out[q], direct))
+    assert routed_bitexact, "routed serve drifted from the barycenter forward"
+    qps = batch / (us / 1e6)
+    _JSON["serve"] = {
+        "batch": batch, "n_models": int(snap.barycenters.shape[0]) + 1,
+        "published_rounds": rounds, "served_round": server.round,
+        "latest_round": store.latest_round(),
+        "queries_per_s": qps, "us_per_batch": us, "swap_ms": swap_ms,
+        "hot_swaps": len(rounds) - 1, "compile_count": server.compile_count,
+        "routed_bitexact": routed_bitexact,
+    }
+    return us, qps
+
+
 def bench_comm_cost() -> tuple[float, float]:
     from benchmarks.comm_cost import table
 
@@ -410,6 +473,7 @@ def main() -> None:
         ("coalition_vs_fedavg_energy_constrained",
          bench_energy_constrained_stragglers),
         ("coalition_vs_fedavg_correlated_skew", bench_correlated_skew),
+        ("serve_routed_batch", bench_serve),
         ("comm_cost_table", bench_comm_cost),
         ("decode_step_reduced", bench_decode_throughput),
     ]

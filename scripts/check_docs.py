@@ -41,6 +41,8 @@ KNOWN_PARSERS = {
         "repro.launch.train", fromlist=["build_parser"]).build_parser(),
     "benchmarks.run": lambda: __import__(
         "benchmarks.run", fromlist=["build_parser"]).build_parser(),
+    "repro.launch.serve": lambda: __import__(
+        "repro.launch.serve", fromlist=["build_parser"]).build_parser(),
 }
 
 

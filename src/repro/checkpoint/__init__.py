@@ -1,4 +1,6 @@
-from repro.checkpoint.checkpoint import (latest_step, restore, save,
+from repro.checkpoint.checkpoint import (FEDERATION_SCHEMA, available_steps,
+                                         latest_step, load, restore, save,
                                          save_federation)
 
-__all__ = ["save", "restore", "latest_step", "save_federation"]
+__all__ = ["FEDERATION_SCHEMA", "available_steps", "latest_step", "load",
+           "restore", "save", "save_federation"]

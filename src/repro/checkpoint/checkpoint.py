@@ -4,12 +4,28 @@ Layout: ``<dir>/step_<n>/arrays.npz`` + ``meta.json`` (treedef, dtypes,
 optional PartitionSpec strings so a restored checkpoint can be re-sharded on a
 different mesh).  No orbax in this container; this covers the framework's
 needs: atomic save, latest-step discovery, federation snapshots (global model
-+ coalition state + round).
++ strategy state + engine carry + trace prefix), and the serving-side
+:class:`repro.serve.ModelStore` round snapshots.
+
+Two restore paths:
+
+* :func:`restore` — template-driven: the caller supplies a ``like`` pytree
+  and gets the checkpoint cast into its exact structure/dtypes.  Strict: a
+  checkpoint whose leaf set does not match the template (missing, extra, or
+  renamed leaves; shape mismatches) raises instead of silently returning a
+  half-restored tree.
+* :func:`load` — template-free: rebuilds a nested-``dict`` pytree from the
+  slash-separated leaf names and the recorded (pre-widening) dtypes.  This is
+  what a *server* uses — it has no live model to restore into.
+
+``meta.json`` records each leaf's dtype *before* the npz f32-widening of
+ml_dtypes (bfloat16, fp8), so both paths round-trip low-precision leaves.
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import tempfile
 from typing import Any
@@ -19,82 +35,225 @@ import numpy as np
 
 PyTree = Any
 
+#: schema tag written by :func:`save_federation`
+FEDERATION_SCHEMA = "federation/v2"
 
-def _flatten_with_names(tree: PyTree) -> dict[str, np.ndarray]:
-    flat = {}
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten_with_names(tree: PyTree) -> tuple[dict[str, np.ndarray],
+                                               dict[str, str]]:
+    """Flatten to ``name -> np array`` plus the *original* dtype per leaf.
+
+    ml_dtypes leaves (bfloat16, fp8; numpy kind 'V') are not
+    npz-serialisable; they are stored widened to float32 (lossless) and the
+    returned dtype map remembers what they were so restore/load can cast
+    back.
+    """
+    flat, dtypes = {}, {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         arr = np.asarray(leaf)
+        dtypes[name] = str(arr.dtype)
         if arr.dtype.kind not in "biufc":
-            # ml_dtypes (bfloat16, fp8; numpy kind 'V') are not
-            # npz-serialisable; store as float32 (lossless widening) —
-            # restore() casts back via the template's dtype.
             import jax.numpy as jnp
 
             arr = np.asarray(jnp.asarray(leaf).astype(jnp.float32))
         flat[name] = arr
-    return flat
+    return flat, dtypes
 
 
 def save(ckpt_dir: str, step: int, tree: PyTree,
          extra_meta: dict | None = None) -> str:
-    """Atomically save a pytree checkpoint.  Returns the step directory."""
-    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
-    tmp = tempfile.mkdtemp(dir=ckpt_dir if os.path.isdir(ckpt_dir) else None)
+    """Atomically save a pytree checkpoint.  Returns the step directory.
+
+    The staging directory lives *inside* ``ckpt_dir`` (same filesystem, so
+    the final ``os.replace`` is atomic) with a ``.tmp-`` prefix that
+    :func:`available_steps` / :func:`latest_step` never match — an
+    interrupted save can leave stray directories but never a half-written
+    ``step_*`` entry.
+
+    Re-publishing an existing step renames the old snapshot to a ``.tmp-``
+    trash name before installing the new one, so a crash loses at most the
+    window between two renames (not an ``rmtree``); a failed install puts
+    the old snapshot back.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
-    flat = _flatten_with_names(tree)
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=".tmp-step-", dir=ckpt_dir)
+    flat, dtypes = _flatten_with_names(tree)
     np.savez(os.path.join(tmp, "arrays.npz"), **flat)
     treedef = jax.tree.structure(tree)
     meta = {
         "step": step,
         "treedef": str(treedef),
         "names": sorted(flat),
-        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "dtypes": dtypes,
         **(extra_meta or {}),
     }
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f, indent=1)
-    if os.path.exists(step_dir):
-        shutil.rmtree(step_dir)
-    os.replace(tmp, step_dir)
+    if os.path.lexists(step_dir):
+        trash = tempfile.mkdtemp(prefix=".tmp-trash-", dir=ckpt_dir)
+        old = os.path.join(trash, "old")
+        os.replace(step_dir, old)
+        try:
+            os.replace(tmp, step_dir)
+        except BaseException:
+            os.replace(old, step_dir)
+            raise
+        shutil.rmtree(trash, ignore_errors=True)
+    else:
+        os.replace(tmp, step_dir)
     return step_dir
 
 
-def restore(ckpt_dir: str, like: PyTree, step: int | None = None) -> PyTree:
-    """Restore into the structure of ``like`` (shape/dtype template)."""
+def _step_path(ckpt_dir: str, step: int | None) -> tuple[str, int]:
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    return os.path.join(ckpt_dir, f"step_{step:08d}"), step
+
+
+def restore(ckpt_dir: str, like: PyTree, step: int | None = None) -> PyTree:
+    """Restore into the structure of ``like`` (shape/dtype template).
+
+    Strict by construction: the checkpoint's leaf-name set must equal the
+    template's, and every stored array must match the template leaf's shape —
+    missing, extra, or renamed leaves raise a :class:`KeyError` naming the
+    offenders instead of silently restoring a subset.
+    """
+    step_dir, step = _step_path(ckpt_dir, step)
     arrays = np.load(os.path.join(step_dir, "arrays.npz"))
-    flat_like = _flatten_with_names(like)
+    flat_like, _ = _flatten_with_names(like)
     missing = set(flat_like) - set(arrays.files)
-    if missing:
-        raise KeyError(f"checkpoint missing leaves: {sorted(missing)[:5]}...")
+    extra = set(arrays.files) - set(flat_like)
+    if missing or extra:
+        raise KeyError(
+            f"checkpoint step {step} does not match the template: "
+            f"missing leaves {sorted(missing)[:5]}, "
+            f"extra/renamed leaves {sorted(extra)[:5]} "
+            f"(template has {len(flat_like)} leaves, checkpoint "
+            f"{len(arrays.files)})")
     leaves_like, treedef = jax.tree.flatten(like)
-    names = list(_flatten_with_names(like))
+    names = list(flat_like)
     # tree_flatten_with_path and tree_flatten agree on leaf order; cast via
     # jnp (numpy lacks cast kernels for ml_dtypes like bfloat16)
     import jax.numpy as jnp
 
-    restored = [jnp.asarray(arrays[n]).astype(l.dtype)
-                for n, l in zip(names, leaves_like)]
+    restored = []
+    for n, l in zip(names, leaves_like):
+        arr = arrays[n]
+        if tuple(arr.shape) != tuple(np.shape(l)):
+            raise ValueError(
+                f"checkpoint leaf {n!r} has shape {tuple(arr.shape)} but the "
+                f"template expects {tuple(np.shape(l))}")
+        restored.append(jnp.asarray(arr).astype(l.dtype))
     return jax.tree.unflatten(treedef, restored)
 
 
-def latest_step(ckpt_dir: str) -> int | None:
+def load(ckpt_dir: str, step: int | None = None) -> tuple[PyTree, dict]:
+    """Template-free load: ``(nested-dict pytree, meta)``.
+
+    Rebuilds nesting from the slash-separated leaf names and casts each leaf
+    back to its recorded pre-widening dtype (so bfloat16 leaves come back as
+    bfloat16 even though npz stored them widened to float32).  All mappings
+    come back as plain ``dict``s — callers that need a specific container
+    type (NamedTuple state, tuple carries) should use :func:`restore` with a
+    template instead.
+    """
+    import jax.numpy as jnp
+
+    step_dir, step = _step_path(ckpt_dir, step)
+    arrays = np.load(os.path.join(step_dir, "arrays.npz"))
+    with open(os.path.join(step_dir, "meta.json")) as f:
+        meta = json.load(f)
+    dtypes = meta.get("dtypes", {})
+    tree: dict = {}
+    for name in arrays.files:
+        parts = name.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+            if not isinstance(node, dict):
+                raise ValueError(
+                    f"leaf name {name!r} collides with another leaf's path")
+        if parts[-1] in node:
+            raise ValueError(
+                f"leaf name {name!r} collides with another leaf's path")
+        leaf = jnp.asarray(arrays[name])
+        want = dtypes.get(name)
+        if want is not None and want != str(leaf.dtype):
+            leaf = leaf.astype(want)
+        node[parts[-1]] = leaf
+    return tree, meta
+
+
+def available_steps(ckpt_dir: str) -> list[int]:
+    """Sorted step numbers with a complete ``step_<n>`` directory.
+
+    Malformed entries (a stray ``step_foo``, an interrupted staging
+    directory, a ``step_`` with a non-integer suffix) are skipped instead of
+    crashing discovery — exactly the situation after a killed save.
+    """
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_")]
-    return max(steps) if steps else None
+        return []
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(d)
+        if m is not None and os.path.isdir(os.path.join(ckpt_dir, d)):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = available_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def _indexed(tree: PyTree) -> dict[str, Any]:
+    """Leaves as an order-indexed dict (``{'0000': leaf, ...}``).
+
+    Used for sub-trees whose container types (NamedTuples, tuples,
+    arbitrary strategy state) would not survive the template-free
+    :func:`load`; the consumer unflattens with a live structure template.
+    """
+    return {f"{i:04d}": leaf for i, leaf in enumerate(jax.tree.leaves(tree))}
 
 
 def save_federation(ckpt_dir: str, round_: int, global_params: PyTree,
-                    coal_state, history: dict | None = None) -> str:
-    """Federation snapshot: global model + coalition centers + history."""
-    tree = {"global": global_params,
-            "centers": coal_state.center_idx,
-            "round": coal_state.round}
-    return save(ckpt_dir, round_, tree, extra_meta={"history": history or {}})
+                    state: PyTree, history: dict | None = None, *,
+                    carry: PyTree | None = None,
+                    trace: dict | None = None,
+                    extra_meta: dict | None = None) -> str:
+    """Federation snapshot: global model + strategy state (+ resume payload).
+
+    Schema (``meta['schema'] == 'federation/v2'``)::
+
+        global/...       the θ pytree, its own nesting preserved
+        strategy/<i>     the strategy's state leaves, order-indexed (opaque
+                         to the checkpoint layer — fedavg carries a bare
+                         round counter, coalition rules a CoalitionState)
+        round            () int32
+        carry/<i>        (optional) the engine's full scan carry, order-
+                         indexed, PRNG keys pre-exported to raw key data —
+                         what ``Federation.run(resume=True)`` restores for a
+                         bit-for-bit mid-run restart
+        trace/<name>     (optional) the stacked per-round metric arrays for
+                         rounds 0..round_, so a resumed run returns the same
+                         complete History as an uninterrupted one
+
+    ``state`` may be *any* strategy state pytree (the seed version assumed a
+    ``CoalitionState`` and crashed on every other rule).
+    """
+    tree: dict[str, Any] = {"global": global_params,
+                            "strategy": _indexed(state),
+                            "round": np.int32(round_)}
+    if carry is not None:
+        tree["carry"] = _indexed(carry)
+    if trace is not None:
+        tree["trace"] = dict(trace)
+    meta = {"history": history or {}, "schema": FEDERATION_SCHEMA,
+            **(extra_meta or {})}
+    return save(ckpt_dir, round_, tree, extra_meta=meta)

@@ -10,7 +10,7 @@ drives an arbitrary registered strategy:
 Four interchangeable engines execute that round program:
 
   ``'scan'``       (default) — the whole federation (all R rounds, eval
-                 included) is ONE jitted ``jax.lax.scan`` program: zero
+                 included) is jitted ``jax.lax.scan`` programs: zero
                  host round-trips, zero per-round dispatch overhead, and
                  the :class:`History` comes back as stacked device arrays.
   ``'python'``   — the legacy host-side loop (one jitted round per step);
@@ -40,12 +40,31 @@ Four interchangeable engines execute that round program:
                  staleness measured in simulated *seconds*, and depletes a
                  per-device **energy budget** every train/transmit cycle —
                  devices that can no longer afford a cycle retire
-                 (energy-censored participation).  Still one jitted
-                 ``lax.scan`` (over a fixed event budget, default
+                 (energy-censored participation).  Still jitted
+                 ``lax.scan`` programs (over a fixed event budget, default
                  ``rounds - 1``); on the ``ideal`` fleet with an unbounded
                  budget every event fires the full simultaneous cohort and
                  the engine reproduces ``scan`` bit-for-bit (tested in
                  ``tests/test_event_driven.py``).
+
+Every engine is phrased as **prologue + chunked scan**: a jitted round-0
+census prologue builds the engine's scan carry, and the remaining
+rounds/events run as one or more jitted ``lax.scan`` *chunk* programs over
+that carry (memoized per chunk length, so a plain run compiles exactly one
+chunk of length R-1 — the monolithic program of old).  Chunk boundaries are
+where the host gets the carry back, which is what powers the two producer
+hooks of :meth:`Federation.run`:
+
+* ``snapshot_every=k`` + ``store`` — publish a round snapshot (global θ,
+  all per-coalition barycenters, the round's assignment vector) into a
+  :class:`repro.serve.ModelStore` at rounds ``r % k == 0`` plus the final
+  round, while a serving front end hot-swaps them live.
+* ``ckpt_every=k`` + ``ckpt_dir`` — write a ``save_federation`` checkpoint
+  carrying the *full* engine carry (θ, strategy state, staleness buffers,
+  energy ledger, PRNG keys) and the trace-so-far; ``resume=True`` restores
+  the latest one and continues **bit-for-bit identically** to an
+  uninterrupted run — scan composition is exact, the step program is
+  unchanged.
 
 All engines follow the identical PRNG-split discipline (the substrate
 engines draw availability from a *forked* stream via ``fold_in``, leaving
@@ -70,7 +89,7 @@ from repro import sim as sim_mod
 from repro.core import backends as bk
 from repro.core import pytree, strategies
 from repro.core.client import ClientConfig, client_update
-from repro.core.strategies import RoundMetrics, Strategy
+from repro.core.strategies import RoundMetrics, RoundResult, Strategy
 
 PyTree = Any
 
@@ -202,6 +221,84 @@ class History:
         return np.asarray(self.trace.energy_exhausted).astype(int).tolist()
 
 
+# -- engine scan carries --------------------------------------------------------
+# One NamedTuple per engine: the full state a chunk boundary hands back to
+# the host.  ``gp`` (the θ pytree) and ``bary`` (the (n_groups, D) per-group
+# models of the round just finished) lead every carry so the snapshot
+# publisher and the checkpointer can read them engine-agnostically; the
+# substrate engines append their buffers/ledgers.  A checkpointed carry is
+# the complete resume payload — restoring it and re-running the remaining
+# chunks is bit-for-bit identical to never having stopped.
+
+
+class _ScanCarry(NamedTuple):
+    key: jax.Array       # client-update PRNG chain
+    gp: PyTree           # θ^(r) as a model pytree
+    state: PyTree        # strategy state
+    bary: jax.Array      # (n_groups, D) per-group models of round r
+
+
+class _SemiAsyncCarry(NamedTuple):
+    key: jax.Array
+    gp: PyTree
+    state: PyTree
+    bary: jax.Array
+    buf: jax.Array       # (N, D) last delivered update per client
+    tau: jax.Array       # (N,) staleness counters (rounds)
+    astate: Any          # availability Markov state (own PRNG stream)
+
+
+class _EventCarry(NamedTuple):
+    key: jax.Array
+    gp: PyTree
+    state: PyTree
+    bary: jax.Array
+    buf: jax.Array       # (N, D) last delivered update per client
+    last_t: jax.Array    # (N,) sim seconds of each row's delivery
+    energy: jax.Array    # (N,) joules remaining
+    spent: jax.Array     # (N,) joules spent (cumulative)
+    next_t: jax.Array    # (N,) completion-event queue (+inf = retired)
+    clock: jax.Array     # () absolute sim seconds
+    astate: Any
+
+
+def _export_prng(tree: PyTree) -> PyTree:
+    """Typed PRNG-key leaves -> raw uint32 key data (npz-serialisable)."""
+
+    def conv(l):
+        if hasattr(l, "dtype") and jax.dtypes.issubdtype(l.dtype,
+                                                         jax.dtypes.prng_key):
+            return jax.random.key_data(l)
+        return l
+
+    return jax.tree.map(conv, tree)
+
+
+def _import_indexed(indexed: dict, template: PyTree) -> PyTree:
+    """Rebuild ``template``'s structure from an order-indexed leaf dict
+    (the ``{'0000': leaf, ...}`` form :func:`repro.checkpoint.save_federation`
+    writes), re-wrapping raw key data into typed PRNG keys."""
+    leaves_t, treedef = jax.tree.flatten(template)
+    names = sorted(indexed)
+    if len(names) != len(leaves_t):
+        raise ValueError(
+            f"checkpoint carry has {len(names)} leaves but this engine's "
+            f"carry has {len(leaves_t)} — wrong engine or config?")
+    out = []
+    for n, lt in zip(names, leaves_t):
+        raw = jnp.asarray(indexed[n])
+        if jax.dtypes.issubdtype(lt.dtype, jax.dtypes.prng_key):
+            out.append(jax.random.wrap_key_data(
+                raw.astype(jnp.uint32), impl=jax.random.key_impl(lt)))
+            continue
+        if tuple(raw.shape) != tuple(jnp.shape(lt)):
+            raise ValueError(
+                f"checkpoint carry leaf {n} has shape {tuple(raw.shape)}; "
+                f"this engine expects {tuple(jnp.shape(lt))}")
+        out.append(raw.astype(lt.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
 class Federation:
     """A federation = one strategy + one engine over a client population.
 
@@ -216,6 +313,8 @@ class Federation:
         options listed, not deep inside dispatch.
       strategy: optional pre-built :class:`Strategy` (overrides cfg.method).
     """
+
+    _ENGINES = ("event_driven", "python", "scan", "semi_async")
 
     def __init__(self, loss_fn: Callable[[PyTree, PyTree], jax.Array],
                  eval_fn: Callable[[PyTree], jax.Array],
@@ -258,6 +357,10 @@ class Federation:
             strategies.make_strategy(cfg.method, n_clients=cfg.n_clients,
                                      n_coalitions=cfg.n_coalitions,
                                      backend=cfg.backend)
+        #: memoized jitted chunk programs, keyed by (engine spec, length) —
+        #: a plain run compiles exactly one; a snapshot cadence adds at most
+        #: one more (the remainder chunk)
+        self._chunk_progs: dict[tuple[str, int], Callable] = {}
 
     # -- shared round pieces -----------------------------------------------------
 
@@ -270,116 +373,38 @@ class Federation:
         )(client_data, ckeys)
         return pytree.client_matrix(new_params), losses
 
+    def _bary_of(self, res: RoundResult) -> jax.Array:
+        """The (n_groups, D) per-group models this round produced.
+
+        Coalition rules return their actual barycenters; flat rules (which
+        serve every client the global model) get θ broadcast to each group.
+        """
+        if res.barycenters is not None:
+            return res.barycenters
+        return jnp.broadcast_to(res.theta[None, :],
+                                (self.strategy.n_groups, res.theta.shape[0]))
+
     def _round0(self, init_params, client_data, key):
         """Round 0: ω^0 <- ClientUpdate(θ^(0)); strategy state init from ω^0.
 
         Always full-participation — the bootstrap census round every engine
-        shares (and which fills the ``semi_async`` buffer).
+        shares (and which fills the substrate engines' buffers).  Returns
+        ``(key, gp, state, bary, w0, y0)`` where ``y0`` is the round-0 row
+        of the core trace metrics.
         """
         key, k0, kc = jax.random.split(key, 3)
         w0, losses0 = self._local_phase(init_params, client_data, k0)
         state = self.strategy.init_state(kc, w0)
         res = self.strategy.round(w0, state)
         gp = pytree.unflatten(res.theta, init_params)
-        return (key, gp, res.state, w0, jnp.mean(losses0), self.eval_fn(gp),
-                res.metrics)
-
-    # -- engines -------------------------------------------------------------------
-    # The jitted programs are memoized per Federation instance, so repeated
-    # .run() calls (benchmark reps, sweeps over seeds) compile exactly once.
-    #
-    # Donation contract: each engine is a jitted prologue (``_round0_jit``,
-    # which owns the user's ``init_params`` and never donates them) followed
-    # by the scanned/looped main program, whose round-0 carry — the θ pytree,
-    # strategy state, and (semi_async) the (N, D) buffer + staleness counters
-    # — is DONATED (``donate_argnums``).  Those arrays are produced by the
-    # prologue, consumed exactly once here, and returned as outputs, so XLA
-    # updates the carried θ and the federation buffers in place instead of
-    # double-buffering D-sized arrays.  User-facing inputs to ``run()`` are
-    # never donated.
-
-    @functools.cached_property
-    def _scan_engine(self):
-        """(key, θ, state, round-0 metrics, data) -> (θ_final, state, Trace).
-
-        All R-1 remaining rounds (eval included) as ONE lax.scan program; the
-        θ pytree and strategy state are donated and returned, so the carry
-        updates in place.
-        """
-
-        def step_with(data):
-            def step(carry, _):
-                key, params, state = carry
-                key, kr = jax.random.split(key)
-                w, losses = self._local_phase(params, data, kr)
-                res = self.strategy.round(w, state)
-                gp = pytree.unflatten(res.theta, params)
-                acc = self.eval_fn(gp)
-                return (key, gp, res.state), (jnp.mean(losses), acc,
-                                              res.metrics)
-
-            return step
-
-        def engine(key, gp, state, loss0, acc0, m0, client_data):
-            (_, gp, state), (loss, acc, m) = jax.lax.scan(
-                step_with(client_data), (key, gp, state), None,
-                length=self.cfg.rounds - 1)
-            trace = Trace(
-                loss=jnp.concatenate([loss0[None], loss]),
-                acc=jnp.concatenate([acc0[None], acc]),
-                assignment=jnp.concatenate([m0.assignment[None], m.assignment]),
-                counts=jnp.concatenate([m0.counts[None], m.counts]))
-            return gp, state, trace
-
-        return jax.jit(engine, donate_argnums=(1, 2))
-
-    def _run_scan(self, init_params, client_data, key):
-        """All R rounds (eval included) as one jitted prologue + scan."""
-        key, gp, state, _, loss0, acc0, m0 = self._round0_jit(
-            init_params, client_data, key)
-        gp, _, trace = self._scan_engine(key, gp, state, loss0, acc0, m0,
-                                         client_data)
-        return gp, History(trace=jax.device_get(trace))
-
-    @functools.cached_property
-    def _round_jit(self):
-        def round_fn(params, state, client_data, kr):
-            w, losses = self._local_phase(params, client_data, kr)
-            res = self.strategy.round(w, state)
-            return (pytree.unflatten(res.theta, params), res.state,
-                    jnp.mean(losses), res.metrics)
-
-        # The host loop rebinds (gp, state) to this round's outputs, so the
-        # previous round's buffers are dead on entry — donate them and θ
-        # updates in place even in the debug engine.
-        return jax.jit(round_fn, donate_argnums=(0, 1))
+        y0 = {"loss": jnp.mean(losses0), "acc": self.eval_fn(gp),
+              "assignment": res.metrics.assignment,
+              "counts": res.metrics.counts}
+        return key, gp, res.state, self._bary_of(res), w0, y0
 
     @functools.cached_property
     def _round0_jit(self):
         return jax.jit(self._round0)
-
-    @functools.cached_property
-    def _eval_jit(self):
-        return jax.jit(self.eval_fn)
-
-    def _run_python(self, init_params, client_data, key):
-        """Legacy host loop: one jitted round program per step."""
-        key, gp, state, _, loss0, acc0, m0 = self._round0_jit(
-            init_params, client_data, key)
-        loss_l, acc_l = [loss0], [acc0]
-        asg_l, cnt_l = [m0.assignment], [m0.counts]
-        for _ in range(1, self.cfg.rounds):
-            key, kr = jax.random.split(key)
-            gp, state, loss, m = self._round_jit(gp, state, client_data, kr)
-            loss_l.append(loss)
-            acc_l.append(self._eval_jit(gp))
-            asg_l.append(m.assignment)
-            cnt_l.append(m.counts)
-        trace = Trace(loss=jnp.stack(loss_l), acc=jnp.stack(acc_l),
-                      assignment=jnp.stack(asg_l), counts=jnp.stack(cnt_l))
-        return gp, History(trace=jax.device_get(trace))
-
-    # -- the IoT-substrate engine ---------------------------------------------------
 
     @functools.cached_property
     def _fleet(self) -> sim_mod.DeviceFleet:
@@ -387,13 +412,96 @@ class Federation:
         return sim_mod.make_fleet(self.cfg.sim.fleet, self.cfg.n_clients,
                                   seed=self.cfg.sim.seed)
 
-    @functools.cached_property
-    def _semi_async_engine(self):
-        """Partial-participation engine with staleness-weighted merging.
+    # -- engine prologues (round 0 -> initial chunk carry) -------------------------
+    # Jitted census round (memoized `_round0_jit`, which owns the user's
+    # ``init_params`` and never donates them) plus eager one-off substrate
+    # initialisation.  The returned carry is donated into the first chunk.
 
-        Scan-carried substrate state: the (N, D) buffer of each client's
-        last *delivered* update, the (N,) integer staleness counters, and
-        the availability process.  Per round:
+    def _prologue_scan(self, init_params, client_data, key):
+        key, gp, state, bary, _, y0 = self._round0_jit(
+            init_params, client_data, key)
+        return _ScanCarry(key, gp, state, bary), y0
+
+    def _prologue_semi_async(self, init_params, client_data, key):
+        # Fork the availability stream off the run key WITHOUT consuming
+        # it, so the client-update key chain is identical to 'scan'.
+        scfg = self.cfg.sim
+        akey = jax.random.fold_in(key, sim_mod.AVAILABILITY_STREAM)
+        key, gp, state, bary, w0, y0 = self._round0_jit(
+            init_params, client_data, key)
+        model_bytes = w0.shape[1] * bytes_per_param(w0)
+        dev_time = sim_mod.device_round_time(self._fleet, model_bytes,
+                                             scfg.local_work)
+        astate = sim_mod.init_availability(akey, self._fleet,
+                                           scfg.participation)
+        mask0 = jnp.ones((self.cfg.n_clients,), bool)    # bootstrap census
+        t0, wan0, edge0 = sim_mod.round_stats(
+            mask0, dev_time, model_bytes, self.strategy.n_groups,
+            self.strategy.hierarchical)
+        y0 = dict(y0, sim_time=t0, wan_bytes=wan0, edge_bytes=edge0,
+                  participation=mask0.astype(jnp.float32))
+        tau0 = jnp.zeros((self.cfg.n_clients,), jnp.int32)
+        return _SemiAsyncCarry(key, gp, state, bary, w0, tau0, astate), y0
+
+    def _prologue_event_driven(self, init_params, client_data, key):
+        scfg, n = self.cfg.sim, self.cfg.n_clients
+        akey = jax.random.fold_in(key, sim_mod.AVAILABILITY_STREAM)
+        key, gp, state, bary, w0, y0 = self._round0_jit(
+            init_params, client_data, key)
+        model_bytes = w0.shape[1] * bytes_per_param(w0)
+        dev_time = sim_mod.device_round_time(self._fleet, model_bytes,
+                                             scfg.local_work)
+        e_event = sim_mod.device_event_energy(self._fleet, model_bytes,
+                                              scfg.local_work)
+        astate = sim_mod.init_availability(akey, self._fleet,
+                                           scfg.participation)
+        mask0 = jnp.ones((n,), bool)                     # bootstrap census
+        t0, wan0, edge0 = sim_mod.round_stats(
+            mask0, dev_time, model_bytes, self.strategy.n_groups,
+            self.strategy.hierarchical)
+        # The census barrier closes when its straggler reports (t0).
+        # The bootstrap census is forced (it fills the buffer every
+        # engine shares), so a device pays for it only up to what it
+        # has: the ledger can never overdraw the configured budget, and
+        # a device that could not afford the full cycle starts retired
+        # (energy_exhausted from row 0).  Only devices that can afford
+        # the NEXT full cycle enter the event queue.
+        paid0 = jnp.minimum(e_event, jnp.float32(scfg.energy_budget))
+        energy0 = jnp.full((n,), scfg.energy_budget, jnp.float32) - paid0
+        spent0 = paid0
+        alive0 = energy0 >= e_event
+        next_t0 = jnp.where(alive0, t0 + dev_time, jnp.inf)
+        last_t0 = jnp.full((n,), t0)
+        y0 = dict(y0, sim_time=t0, wan_bytes=wan0, edge_bytes=edge0,
+                  participation=mask0.astype(jnp.float32), event_time=t0,
+                  energy_spent=spent0,
+                  energy_exhausted=jnp.logical_not(alive0).astype(
+                      jnp.float32))
+        return _EventCarry(key, gp, state, bary, w0, last_t0, energy0,
+                           spent0, next_t0, t0, astate), y0
+
+    # -- engine step programs (one scanned round / event) --------------------------
+
+    def _step_scan(self, data):
+        strategy = self.strategy
+
+        def step(carry: _ScanCarry, _):
+            key, kr = jax.random.split(carry.key)
+            w, losses = self._local_phase(carry.gp, data, kr)
+            res = strategy.round(w, carry.state)
+            gp = pytree.unflatten(res.theta, carry.gp)
+            acc = self.eval_fn(gp)
+            y = {"loss": jnp.mean(losses), "acc": acc,
+                 "assignment": res.metrics.assignment,
+                 "counts": res.metrics.counts}
+            return _ScanCarry(key, gp, res.state, self._bary_of(res)), y
+
+        return step
+
+    def _step_semi_async(self, data):
+        """Partial-participation round with staleness-weighted merging.
+
+        Per round:
 
           mask  <- availability ∧ (device round time <= deadline)
           buf   <- fresh updates where present, else kept
@@ -405,101 +513,48 @@ class Federation:
         cfg, scfg = self.cfg, self.cfg.sim
         fleet, strategy = self._fleet, self.strategy
 
-        def step_with(data, dev_time):
-            def step(carry, _):
-                key, params, state, buf, tau, astate = carry
-                key, kr = jax.random.split(key)      # same chain as 'scan'
-                mask, astate = sim_mod.sample_mask(
-                    astate, fleet, scfg.participation,
-                    device_time=dev_time, deadline=scfg.deadline)
-                w, losses = self._local_phase(params, data, kr)
-                buf = jnp.where(mask[:, None], w, buf)
-                tau = jnp.where(mask, 0, tau + 1)
-                # tau == 0 (just delivered) decays to exactly 1.0, so under
-                # full participation eff is all-ones and the masked round is
-                # bit-identical to the synchronous one.
-                eff = sim_mod.staleness_weights(tau, scfg.staleness_alpha)
-                res = strategy.round(buf, state, mask=eff)
-                gp = pytree.unflatten(res.theta, params)
-                acc = self.eval_fn(gp)
-                # Participants' mean loss, phrased through the same jnp.mean
-                # as the idealized engines (scale is exactly 1.0 at full
-                # participation => bit-identical codegen).
-                m = mask.astype(jnp.float32)
-                scale = cfg.n_clients / jnp.maximum(jnp.sum(m), 1.0)
-                loss = jnp.mean(losses * (m * scale))
-                sim_t, wan, edge = sim_mod.round_stats(
-                    mask, dev_time, buf.shape[1] * bytes_per_param(buf),
-                    strategy.n_groups, strategy.hierarchical,
-                    deadline=scfg.deadline)
-                return ((key, gp, res.state, buf, tau, astate),
-                        (loss, acc, res.metrics, m, sim_t, wan, edge))
-
-            return step
-
-        def engine(key, akey, gp, state, buf, tau, loss0, acc0, m0,
-                   client_data):
-            model_bytes = buf.shape[1] * bytes_per_param(buf)
+        def step(carry: _SemiAsyncCarry, _):
+            key, kr = jax.random.split(carry.key)    # same chain as 'scan'
+            model_bytes = carry.buf.shape[1] * bytes_per_param(carry.buf)
             dev_time = sim_mod.device_round_time(fleet, model_bytes,
                                                  scfg.local_work)
-            astate = sim_mod.init_availability(akey, fleet,
-                                               scfg.participation)
-            mask0 = jnp.ones((cfg.n_clients,), bool)     # bootstrap census
-            t0, wan0, edge0 = sim_mod.round_stats(
-                mask0, dev_time, model_bytes, strategy.n_groups,
-                strategy.hierarchical)
-            carry0 = (key, gp, state, buf, tau, astate)
-            (_, gp, state, buf, tau, _), \
-                (loss, acc, m, pmask, sim_t, wan, edge) = \
-                jax.lax.scan(step_with(client_data, dev_time), carry0, None,
-                             length=cfg.rounds - 1)
-            trace = Trace(
-                loss=jnp.concatenate([loss0[None], loss]),
-                acc=jnp.concatenate([acc0[None], acc]),
-                assignment=jnp.concatenate([m0.assignment[None], m.assignment]),
-                counts=jnp.concatenate([m0.counts[None], m.counts]),
-                sim_time=jnp.concatenate([t0[None], sim_t]),
-                wan_bytes=jnp.concatenate([wan0[None], wan]),
-                edge_bytes=jnp.concatenate([edge0[None], edge]),
-                participation=jnp.concatenate(
-                    [mask0.astype(jnp.float32)[None], pmask]))
-            # The final substrate carry is returned (and discarded by the
-            # caller) so every donated input aliases an output buffer.
-            return gp, trace, (state, buf, tau)
+            mask, astate = sim_mod.sample_mask(
+                carry.astate, fleet, scfg.participation,
+                device_time=dev_time, deadline=scfg.deadline)
+            w, losses = self._local_phase(carry.gp, data, kr)
+            buf = jnp.where(mask[:, None], w, carry.buf)
+            tau = jnp.where(mask, 0, carry.tau + 1)
+            # tau == 0 (just delivered) decays to exactly 1.0, so under
+            # full participation eff is all-ones and the masked round is
+            # bit-identical to the synchronous one.
+            eff = sim_mod.staleness_weights(tau, scfg.staleness_alpha)
+            res = strategy.round(buf, carry.state, mask=eff)
+            gp = pytree.unflatten(res.theta, carry.gp)
+            acc = self.eval_fn(gp)
+            # Participants' mean loss, phrased through the same jnp.mean
+            # as the idealized engines (scale is exactly 1.0 at full
+            # participation => bit-identical codegen).
+            m = mask.astype(jnp.float32)
+            scale = cfg.n_clients / jnp.maximum(jnp.sum(m), 1.0)
+            loss = jnp.mean(losses * (m * scale))
+            sim_t, wan, edge = sim_mod.round_stats(
+                mask, dev_time, model_bytes,
+                strategy.n_groups, strategy.hierarchical,
+                deadline=scfg.deadline)
+            y = {"loss": loss, "acc": acc,
+                 "assignment": res.metrics.assignment,
+                 "counts": res.metrics.counts,
+                 "sim_time": sim_t, "wan_bytes": wan, "edge_bytes": edge,
+                 "participation": m}
+            return _SemiAsyncCarry(key, gp, res.state, self._bary_of(res),
+                                   buf, tau, astate), y
 
-        return jax.jit(engine, donate_argnums=(2, 3, 4, 5))
+        return step
 
-    def _run_semi_async(self, init_params, client_data, key):
-        """Fleet-simulated federation: jitted census prologue + one scan.
+    def _step_event_driven(self, data):
+        """One continuous-time completion event with the energy ledger.
 
-        The (N, D) staleness buffer seeded by round 0 and the carried θ are
-        donated into the scan program — they update in place instead of
-        double-buffering two D-sized arrays per round.
-        """
-        # Fork the availability stream off the run key WITHOUT consuming
-        # it, so the client-update key chain is identical to 'scan'.
-        akey = jax.random.fold_in(key, sim_mod.AVAILABILITY_STREAM)
-        key, gp, state, w0, loss0, acc0, m0 = self._round0_jit(
-            init_params, client_data, key)
-        tau0 = jnp.zeros((self.cfg.n_clients,), jnp.int32)
-        gp, trace, _ = self._semi_async_engine(
-            key, akey, gp, state, w0, tau0, loss0, acc0, m0, client_data)
-        return gp, History(trace=jax.device_get(trace))
-
-    # -- the continuous-time event-driven engine --------------------------------------
-
-    @functools.cached_property
-    def _event_driven_engine(self):
-        """Continuous-time event queue with per-device energy budgets.
-
-        No round barrier: each device runs its own train-and-report cycle of
-        :func:`repro.sim.device_round_time` seconds, and the engine advances
-        simulated time completion-by-completion.  The event queue is the
-        scan-carried ``(N,)`` ``next_t`` vector of per-device completion
-        times — with one outstanding cycle per device, ``argmin`` IS the
-        heap pop, and exact ties (the ideal fleet, where every cycle takes
-        0.0 s) fire as one cohort, which is what collapses the event program
-        back onto the round-synchronous one.  Per event:
+        Per event:
 
           cohort  <- { i : next_t[i] == min(next_t) }         (time := that)
           deliver <- cohort ∧ availability draw at the report instant
@@ -514,136 +569,205 @@ class Federation:
         recorded as zero-participation intervals (θ re-aggregates the frozen
         buffer — stable, never NaN).  Energy is charged per *attempt*
         (the device trained and transmitted even if its uplink draw failed),
-        and the forced round-0 census is pre-paid.  All of it is ONE jitted
-        ``lax.scan`` over the static event budget ``sim.max_events``
-        (default ``rounds - 1``) — no per-event host dispatch.
+        and the forced round-0 census is pre-paid in the prologue.
         """
         cfg, scfg = self.cfg, self.cfg.sim
         fleet, strategy = self._fleet, self.strategy
-        n_events = (scfg.max_events if scfg.max_events is not None
-                    else cfg.rounds - 1)
 
-        def step_with(data, dev_time, e_event, model_bytes):
-            def step(carry, _):
-                (key, params, state, buf, last_t, energy, spent, next_t,
-                 clock, astate) = carry
-                key, kr = jax.random.split(key)      # same chain as 'scan'
-                online, astate = sim_mod.sample_mask(astate, fleet,
-                                                     scfg.participation)
-                # pop the next completion cohort off the continuous-time
-                # queue; an all-inf queue (every device retired) fires
-                # nothing and freezes the clock.
-                t_next = jnp.min(next_t)
-                fired_any = jnp.isfinite(t_next)
-                t_now = jnp.where(fired_any, t_next, clock)
-                fire = jnp.logical_and(next_t == t_next, fired_any)
-                deliver = jnp.logical_and(fire, online)
-                w, losses = self._local_phase(params, data, kr)
-                buf = jnp.where(deliver[:, None], w, buf)
-                last_t = jnp.where(deliver, t_now, last_t)
-                # staleness age in simulated seconds; a row delivered this
-                # event has age exactly 0 => weight exactly 1.0, so the
-                # all-simultaneous cohort reduces to the synchronous round.
-                eff = sim_mod.staleness_weights(t_now - last_t,
-                                                scfg.staleness_alpha)
-                res = strategy.round(buf, state, mask=eff)
-                gp = pytree.unflatten(res.theta, params)
-                acc = self.eval_fn(gp)
-                m = deliver.astype(jnp.float32)
-                scale = cfg.n_clients / jnp.maximum(jnp.sum(m), 1.0)
-                loss = jnp.mean(losses * (m * scale))
-                paid = fire.astype(jnp.float32) * e_event
-                energy = energy - paid
-                spent = spent + paid
-                alive = energy >= e_event
-                next_t = jnp.where(
-                    fire, jnp.where(alive, t_now + dev_time, jnp.inf),
-                    next_t)
-                _, wan, edge = sim_mod.round_stats(
-                    deliver, dev_time, model_bytes,
-                    strategy.n_groups, strategy.hierarchical)
-                return ((key, gp, res.state, buf, last_t, energy, spent,
-                         next_t, t_now, astate),
-                        (loss, acc, res.metrics, m, t_now - clock, t_now,
-                         wan, edge, spent,
-                         jnp.logical_not(alive).astype(jnp.float32)))
-
-            return step
-
-        def engine(key, akey, gp, state, buf, loss0, acc0, m0, client_data):
-            n = cfg.n_clients
-            model_bytes = buf.shape[1] * bytes_per_param(buf)
+        def step(carry: _EventCarry, _):
+            key, kr = jax.random.split(carry.key)    # same chain as 'scan'
+            online, astate = sim_mod.sample_mask(carry.astate, fleet,
+                                                 scfg.participation)
+            model_bytes = carry.buf.shape[1] * bytes_per_param(carry.buf)
             dev_time = sim_mod.device_round_time(fleet, model_bytes,
                                                  scfg.local_work)
             e_event = sim_mod.device_event_energy(fleet, model_bytes,
                                                   scfg.local_work)
-            astate = sim_mod.init_availability(akey, fleet,
-                                               scfg.participation)
-            mask0 = jnp.ones((n,), bool)             # bootstrap census
-            t0, wan0, edge0 = sim_mod.round_stats(
-                mask0, dev_time, model_bytes, strategy.n_groups,
-                strategy.hierarchical)
-            # The census barrier closes when its straggler reports (t0).
-            # The bootstrap census is forced (it fills the buffer every
-            # engine shares), so a device pays for it only up to what it
-            # has: the ledger can never overdraw the configured budget, and
-            # a device that could not afford the full cycle starts retired
-            # (energy_exhausted from row 0).  Only devices that can afford
-            # the NEXT full cycle enter the event queue.
-            paid0 = jnp.minimum(e_event, jnp.float32(scfg.energy_budget))
-            energy0 = jnp.full((n,), scfg.energy_budget, jnp.float32) - paid0
-            spent0 = paid0
-            alive0 = energy0 >= e_event
-            next_t0 = jnp.where(alive0, t0 + dev_time, jnp.inf)
-            last_t0 = jnp.full((n,), t0)
-            carry0 = (key, gp, state, buf, last_t0, energy0, spent0,
-                      next_t0, t0, astate)
-            (_, gp, state, buf, *_), \
-                (loss, acc, m, pmask, dt, et, wan, edge, spent, dead) = \
-                jax.lax.scan(
-                    step_with(client_data, dev_time, e_event, model_bytes),
-                    carry0, None, length=n_events)
-            trace = Trace(
-                loss=jnp.concatenate([loss0[None], loss]),
-                acc=jnp.concatenate([acc0[None], acc]),
-                assignment=jnp.concatenate([m0.assignment[None], m.assignment]),
-                counts=jnp.concatenate([m0.counts[None], m.counts]),
-                sim_time=jnp.concatenate([t0[None], dt]),
-                wan_bytes=jnp.concatenate([wan0[None], wan]),
-                edge_bytes=jnp.concatenate([edge0[None], edge]),
-                participation=jnp.concatenate(
-                    [mask0.astype(jnp.float32)[None], pmask]),
-                event_time=jnp.concatenate([t0[None], et]),
-                energy_spent=jnp.concatenate([spent0[None], spent]),
-                energy_exhausted=jnp.concatenate(
-                    [jnp.logical_not(alive0).astype(jnp.float32)[None],
-                     dead]))
-            # The final substrate carry is returned (and discarded by the
-            # caller) so every donated input aliases an output buffer.
-            return gp, trace, (state, buf)
+            # pop the next completion cohort off the continuous-time
+            # queue; an all-inf queue (every device retired) fires
+            # nothing and freezes the clock.
+            t_next = jnp.min(carry.next_t)
+            fired_any = jnp.isfinite(t_next)
+            t_now = jnp.where(fired_any, t_next, carry.clock)
+            fire = jnp.logical_and(carry.next_t == t_next, fired_any)
+            deliver = jnp.logical_and(fire, online)
+            w, losses = self._local_phase(carry.gp, data, kr)
+            buf = jnp.where(deliver[:, None], w, carry.buf)
+            last_t = jnp.where(deliver, t_now, carry.last_t)
+            # staleness age in simulated seconds; a row delivered this
+            # event has age exactly 0 => weight exactly 1.0, so the
+            # all-simultaneous cohort reduces to the synchronous round.
+            eff = sim_mod.staleness_weights(t_now - last_t,
+                                            scfg.staleness_alpha)
+            res = strategy.round(buf, carry.state, mask=eff)
+            gp = pytree.unflatten(res.theta, carry.gp)
+            acc = self.eval_fn(gp)
+            m = deliver.astype(jnp.float32)
+            scale = cfg.n_clients / jnp.maximum(jnp.sum(m), 1.0)
+            loss = jnp.mean(losses * (m * scale))
+            paid = fire.astype(jnp.float32) * e_event
+            energy = carry.energy - paid
+            spent = carry.spent + paid
+            alive = energy >= e_event
+            next_t = jnp.where(
+                fire, jnp.where(alive, t_now + dev_time, jnp.inf),
+                carry.next_t)
+            _, wan, edge = sim_mod.round_stats(
+                deliver, dev_time, model_bytes,
+                strategy.n_groups, strategy.hierarchical)
+            y = {"loss": loss, "acc": acc,
+                 "assignment": res.metrics.assignment,
+                 "counts": res.metrics.counts,
+                 "sim_time": t_now - carry.clock, "wan_bytes": wan,
+                 "edge_bytes": edge, "participation": m,
+                 "event_time": t_now, "energy_spent": spent,
+                 "energy_exhausted": jnp.logical_not(alive).astype(
+                     jnp.float32)}
+            return _EventCarry(key, gp, res.state, self._bary_of(res), buf,
+                               last_t, energy, spent, next_t, t_now,
+                               astate), y
 
-        return jax.jit(engine, donate_argnums=(2, 3, 4))
+        return step
 
-    def _run_event_driven(self, init_params, client_data, key):
-        """Continuous-time federation: jitted census prologue + one scan.
+    # -- the chunked driver ----------------------------------------------------------
 
-        Same donation/PRNG discipline as ``semi_async``: the availability
-        stream forks off the run key without consuming it, and the round-0
-        buffer, θ, and strategy state are donated into the event program.
+    @staticmethod
+    def _spec_of(name: str) -> str:
+        """'python' shares the scan step/carry; it just chunks per round."""
+        return "scan" if name == "python" else name
+
+    def _chunk_program(self, name: str, length: int):
+        """Jitted ``(carry, data) -> (carry', ys)`` running ``length`` rounds.
+
+        Donation contract: the carry — the θ pytree, strategy state, the
+        (n_groups, D) barycenters, and (substrate engines) the (N, D)
+        buffer + staleness/energy ledgers — is produced by the prologue (or
+        the previous chunk), consumed exactly once here, and returned as an
+        output, so XLA updates the carried θ and the federation buffers in
+        place instead of double-buffering D-sized arrays.  User-facing
+        inputs (``client_data``) are never donated.
         """
-        akey = jax.random.fold_in(key, sim_mod.AVAILABILITY_STREAM)
-        key, gp, state, w0, loss0, acc0, m0 = self._round0_jit(
-            init_params, client_data, key)
-        gp, trace, _ = self._event_driven_engine(
-            key, akey, gp, state, w0, loss0, acc0, m0, client_data)
-        return gp, History(trace=jax.device_get(trace))
+        spec = self._spec_of(name)
+        memo_key = (spec, length)
+        if memo_key not in self._chunk_progs:
+            step_builder = getattr(self, f"_step_{spec}")
 
-    _ENGINES = {"scan": _run_scan, "python": _run_python,
-                "semi_async": _run_semi_async,
-                "event_driven": _run_event_driven}
+            def chunk(carry, data):
+                return jax.lax.scan(step_builder(data), carry, None,
+                                    length=length)
+
+            self._chunk_progs[memo_key] = jax.jit(chunk, donate_argnums=(0,))
+        return self._chunk_progs[memo_key]
+
+    def _n_steps(self, name: str) -> int:
+        """Scan steps after the round-0 census (events for event_driven)."""
+        if name == "event_driven" and self.cfg.sim.max_events is not None:
+            return self.cfg.sim.max_events
+        return self.cfg.rounds - 1
+
+    @staticmethod
+    def _fires(r: int, every: int | None, total: int) -> bool:
+        """Hook cadence: every ``every`` rounds from round 0, plus the final
+        round (the serve/resume consumer must always see the finished run)."""
+        return every is not None and (r % every == 0 or r == total)
+
+    def _publish(self, store, name: str, round_: int, carry, row) -> None:
+        store.publish(round_, carry.gp, carry.bary,
+                      assignment=row["assignment"], counts=row["counts"],
+                      extra_meta={"engine": name, "method": self.cfg.method,
+                                  "n_clients": self.cfg.n_clients})
+
+    def _save_ckpt(self, ckpt_dir: str, name: str, round_: int, carry,
+                   parts: list) -> None:
+        from repro import checkpoint
+
+        trace = jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts)
+        checkpoint.save_federation(
+            ckpt_dir, round_, carry.gp, carry.state,
+            carry=_export_prng(carry), trace=trace,
+            extra_meta={"engine": name, "method": self.cfg.method,
+                        "rounds": self.cfg.rounds})
+
+    def _restore_ckpt(self, ckpt_dir: str, name: str, carry_template,
+                      y_keys) -> tuple[int, Any, list] | None:
+        """Latest-checkpoint restore: ``(rounds done, carry, trace parts)``.
+
+        Returns None when the directory holds no checkpoint yet (a resume
+        flag on a first run is then just a fresh start).
+        """
+        from repro import checkpoint
+
+        step = checkpoint.latest_step(ckpt_dir)
+        if step is None:
+            return None
+        tree, meta = checkpoint.load(ckpt_dir, step)
+        if meta.get("schema") != checkpoint.FEDERATION_SCHEMA:
+            raise ValueError(
+                f"{ckpt_dir} step {step} is not a federation checkpoint "
+                f"(schema={meta.get('schema')!r})")
+        if meta.get("engine") != name:
+            raise ValueError(
+                f"checkpoint at {ckpt_dir} was written by engine "
+                f"{meta.get('engine')!r}; cannot resume with {name!r}")
+        if "carry" not in tree or "trace" not in tree:
+            raise ValueError(
+                f"checkpoint at {ckpt_dir} step {step} has no resume "
+                f"payload (published snapshot instead of ckpt_every?)")
+        if set(tree["trace"]) != set(y_keys):
+            raise ValueError(
+                f"checkpoint trace metrics {sorted(tree['trace'])} do not "
+                f"match engine {name!r} metrics {sorted(y_keys)}")
+        carry = _import_indexed(tree["carry"], carry_template)
+        parts = [jax.tree.map(jnp.asarray, tree["trace"])]
+        return int(step), carry, parts
+
+    def _run_driver(self, name, init_params, client_data, key, *,
+                    snapshot_every=None, store=None,
+                    ckpt_every=None, ckpt_dir=None, resume=False):
+        total = self._n_steps(name)
+        carry, y0 = getattr(self, f"_prologue_{self._spec_of(name)}")(
+            init_params, client_data, key)
+        parts = [jax.tree.map(lambda a: jnp.asarray(a)[None], y0)]
+        r_done = 0
+        restored = (self._restore_ckpt(ckpt_dir, name, carry, y0)
+                    if resume else None)
+        if restored is not None:
+            r_done, carry, parts = restored
+        else:
+            # round-0 hooks (cadence fires at r=0: a consumer can start
+            # serving the census model immediately)
+            if self._fires(0, snapshot_every, total):
+                self._publish(store, name, 0, carry, y0)
+            if self._fires(0, ckpt_every, total):
+                self._save_ckpt(ckpt_dir, name, 0, carry, parts)
+
+        if name == "python":
+            boundaries = list(range(r_done + 1, total + 1))
+        else:
+            boundaries = sorted(
+                r for r in range(r_done + 1, total + 1)
+                if r == total or self._fires(r, snapshot_every, total)
+                or self._fires(r, ckpt_every, total))
+        for r in boundaries:
+            carry, ys = self._chunk_program(name, r - r_done)(
+                carry, client_data)
+            parts.append(ys)
+            r_done = r
+            if self._fires(r, snapshot_every, total):
+                row = jax.tree.map(lambda a: a[-1], ys)
+                self._publish(store, name, r, carry, row)
+            if self._fires(r, ckpt_every, total):
+                self._save_ckpt(ckpt_dir, name, r, carry, parts)
+        stacked = (parts[0] if len(parts) == 1 else
+                   jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts))
+        trace = Trace(**stacked)
+        return carry.gp, History(trace=jax.device_get(trace))
 
     def run(self, init_params: PyTree, client_data: PyTree, key: jax.Array,
-            *, engine: str | None = None) -> tuple[PyTree, History]:
+            *, engine: str | None = None,
+            snapshot_every: int | None = None, store=None,
+            ckpt_every: int | None = None, ckpt_dir: str | None = None,
+            resume: bool = False) -> tuple[PyTree, History]:
         """Run the full federation; returns (final θ pytree, History).
 
         Args:
@@ -654,14 +778,48 @@ class Federation:
             the 'ideal' fleet).
           engine: override ``cfg.engine`` ('scan' | 'python' | 'semi_async'
             | 'event_driven').
+          snapshot_every: publish a serving snapshot (θ + per-coalition
+            barycenters + assignment) into ``store`` at every round
+            ``r % snapshot_every == 0`` plus the final round.
+          store: a :class:`repro.serve.ModelStore` (required with
+            ``snapshot_every``).
+          ckpt_every: write a resumable ``save_federation`` checkpoint into
+            ``ckpt_dir`` on the same cadence rule.
+          ckpt_dir: checkpoint directory (required with ``ckpt_every`` or
+            ``resume``; rejected without either, since nothing would ever
+            be written).
+          resume: restore the latest checkpoint under ``ckpt_dir`` and
+            continue — bit-for-bit identical to the uninterrupted run (the
+            checkpoint carries the full engine carry; an empty directory is
+            just a fresh start).
         """
         name = engine if engine is not None else self.cfg.engine
-        try:
-            run_engine = self._ENGINES[name]
-        except KeyError:
+        if name not in self._ENGINES:
             raise ValueError(f"unknown engine {name!r}; registered engines: "
-                             f"{tuple(sorted(self._ENGINES))}") from None
-        return run_engine(self, init_params, client_data, key)
+                             f"{tuple(sorted(self._ENGINES))}")
+        if snapshot_every is not None:
+            if snapshot_every < 1:
+                raise ValueError(
+                    f"snapshot_every={snapshot_every} must be >= 1")
+            if store is None:
+                raise ValueError("snapshot_every requires a store "
+                                 "(repro.serve.ModelStore)")
+        elif store is not None:
+            raise ValueError("store given without snapshot_every")
+        if ckpt_every is not None:
+            if ckpt_every < 1:
+                raise ValueError(f"ckpt_every={ckpt_every} must be >= 1")
+            if ckpt_dir is None:
+                raise ValueError("ckpt_every requires ckpt_dir")
+        elif ckpt_dir is not None and not resume:
+            raise ValueError("ckpt_dir given without ckpt_every or resume "
+                             "would never write a checkpoint")
+        if resume and ckpt_dir is None:
+            raise ValueError("resume requires ckpt_dir")
+        return self._run_driver(name, init_params, client_data, key,
+                                snapshot_every=snapshot_every, store=store,
+                                ckpt_every=ckpt_every, ckpt_dir=ckpt_dir,
+                                resume=resume)
 
 
 def run_federation(init_params: PyTree,

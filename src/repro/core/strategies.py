@@ -70,11 +70,21 @@ class RoundMetrics(NamedTuple):
 
 
 class RoundResult(NamedTuple):
-    """What one strategy round produces."""
+    """What one strategy round produces.
+
+    ``barycenters`` is the serving-side contract: the (n_groups, D) per-group
+    personalized models this round produced (coalition rules return their
+    actual barycenters b_j^r; ``None`` lets the engine substitute θ broadcast
+    to every group, which is exact for flat rules where every client is
+    served the global model).  The engine carries it so a round snapshot
+    (:class:`repro.serve.ModelStore`) can publish per-coalition models
+    without re-deriving them.
+    """
 
     theta: jax.Array        # (D,) float32 — the new global model
     state: PyTree           # strategy state for the next round
     metrics: RoundMetrics
+    barycenters: jax.Array | None = None   # (n_groups, D) float32 or None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -248,7 +258,8 @@ class CoalitionStrategy(Strategy):
         r = self._coalition_round(w, state, mask)
         return RoundResult(theta=r.theta, state=r.state,
                            metrics=RoundMetrics(assignment=r.assignment,
-                                                counts=r.counts))
+                                                counts=r.counts),
+                           barycenters=r.barycenters)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -271,7 +282,8 @@ class TopKCoalitionStrategy(CoalitionStrategy):
         theta = jnp.mean(r.barycenters[top_idx], axis=0)
         return RoundResult(theta=theta, state=r.state,
                            metrics=RoundMetrics(assignment=r.assignment,
-                                                counts=r.counts))
+                                                counts=r.counts),
+                           barycenters=r.barycenters)
 
 
 # --- built-in factories ----------------------------------------------------------

@@ -16,6 +16,9 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train --mode fl --method coalition \
       --engine semi_async --fleet cellular-flaky --scenario correlated-skew \
       --regime dirichlet --rho 1.0 --rounds 20
+  PYTHONPATH=src python -m repro.launch.train --mode fl --method coalition \
+      --rounds 10 --snapshot-dir /tmp/fl-store --snapshot-every 2 \
+      --ckpt-dir /tmp/fl-ckpt --ckpt-every 5
   PYTHONPATH=src python -m repro.launch.train --mode pretrain \
       --arch hymba-1.5b --reduced --steps 200
 """
@@ -103,10 +106,24 @@ def run_fl(args) -> dict:
                           max_events=args.max_events, seed=args.sim_seed,
                           scenario=args.scenario, rho=args.rho))
     params = cnn.init(jax.random.key(args.seed))
+    store = None
+    if args.snapshot_dir is not None:
+        from repro.serve import ModelStore
+
+        store = ModelStore(args.snapshot_dir, keep=args.snapshot_keep)
     t0 = time.time()
     fed = Federation(cnn.loss_fn, lambda p: cnn.accuracy(p, xte_j, yte_j),
                      cfg, strategy=strategy)
-    _, hist = fed.run(params, cd, jax.random.key(args.seed + 1))
+    # --ckpt-dir without --ckpt-every still checkpoints (round 0 + final);
+    # Federation.run rejects a ckpt_dir that would never be written to
+    ckpt_every = args.ckpt_every
+    if args.ckpt_dir is not None and ckpt_every is None and not args.resume:
+        ckpt_every = args.rounds
+    _, hist = fed.run(
+        params, cd, jax.random.key(args.seed + 1),
+        snapshot_every=(args.snapshot_every if store is not None else None),
+        store=store, ckpt_every=ckpt_every, ckpt_dir=args.ckpt_dir,
+        resume=args.resume)
     out = {"mode": "fl", "method": args.method, "engine": args.engine,
            "regime": args.regime,
            "scenario": args.scenario, "rho": args.rho,
@@ -118,6 +135,15 @@ def run_fl(args) -> dict:
            "final_assignment": hist.assignments[-1],
            "final_counts": hist.counts[-1],
            "wall_s": round(time.time() - t0, 1)}
+    if store is not None:
+        out["snapshot_dir"] = args.snapshot_dir
+        out["published_rounds"] = store.rounds()
+    if args.ckpt_dir is not None:
+        from repro import checkpoint
+
+        out["ckpt_dir"] = args.ckpt_dir
+        out["ckpt_rounds"] = checkpoint.available_steps(args.ckpt_dir)
+        out["resumed"] = bool(args.resume)
     if hist.sim_times is not None:      # the IoT-substrate accounting
         out.update({
             "fleet": args.fleet,
@@ -233,6 +259,26 @@ def build_parser() -> argparse.ArgumentParser:
                          "(default: rounds - 1)")
     ap.add_argument("--sim-seed", type=int, default=0,
                     help="fleet sampling seed")
+    # fl: checkpointing + serving snapshots (the producer half of the
+    # train/serve pair; repro.launch.serve --mode fl is the consumer)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="write resumable federation checkpoints here")
+    ap.add_argument("--ckpt-every", type=int, default=None,
+                    help="checkpoint cadence in rounds (requires "
+                         "--ckpt-dir; the final round is always saved; "
+                         "default with --ckpt-dir: round 0 + final only)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint under --ckpt-dir "
+                         "and continue; bit-for-bit identical to an "
+                         "uninterrupted run")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="publish serving snapshots (theta + coalition "
+                         "barycenters + routing assignment) into this "
+                         "ModelStore directory")
+    ap.add_argument("--snapshot-every", type=int, default=1,
+                    help="publish cadence in rounds (with --snapshot-dir)")
+    ap.add_argument("--snapshot-keep", type=int, default=None,
+                    help="retain only the newest N snapshots")
     # fl: joint fleet+data scenarios (repro.sim.scenarios)
     ap.add_argument("--scenario", default="independent",
                     help="joint fleet+data scenario (see "

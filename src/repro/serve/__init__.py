@@ -1,0 +1,13 @@
+"""Inference-side subsystem: model store, coalition routing, batched serving.
+
+Training publishes round snapshots (θ + per-coalition barycenters + the
+assignment vector) into a :class:`ModelStore`; a :class:`BatchServer` serves
+coalition-routed batched queries from the latest snapshot and hot-swaps
+newer rounds without recompiling.  See ``docs/architecture.md`` ("Serving").
+"""
+from repro.serve.frontend import BatchServer
+from repro.serve.routing import GLOBAL, RoutingTable
+from repro.serve.store import SERVE_SCHEMA, ModelStore, Snapshot
+
+__all__ = ["GLOBAL", "SERVE_SCHEMA", "BatchServer", "ModelStore",
+           "RoutingTable", "Snapshot"]

@@ -1,0 +1,166 @@
+"""Batched coalition-routed inference with hot-swappable weights.
+
+The serving problem this solves: a batch of queries arrives, each tagged
+with the client id it came from; per the routing table some queries must be
+answered by coalition 0's barycenter, others by coalition 2's, strangers by
+the global θ — and training keeps publishing new rounds that must go live
+without a serving hiccup.
+
+Design:
+
+* **One stacked model pytree.**  All M = K + 1 served models (row 0 = θ,
+  row 1 + k = coalition k, the :mod:`repro.serve.routing` convention) live
+  as a single pytree whose leaves carry a leading model axis.  Built from a
+  published snapshot with :func:`repro.core.pytree.matrix_to_stacked` — the
+  exact inverse of the engine's flattening, so a routed answer is
+  bit-identical to a direct forward through that coalition's barycenter.
+* **One jitted program, static shapes.**  The forward runs every model row
+  over the full batch (an unrolled loop over the static model axis — M is
+  small, 1 + n_coalitions) and gathers ``outs[row[q], q]`` per query.  No
+  per-query weight gathers, no data-dependent shapes, so one compilation
+  serves every batch of the same (B, ...) signature.
+* **Hot swap = same avals, new values.**  Installing a new round replaces
+  the stacked leaves with arrays of identical shape/dtype; jax's jit cache
+  is keyed on avals, so the swapped-in weights reuse the compiled
+  executable.  :attr:`BatchServer.compile_count` counts actual traces (the
+  counter increments inside the traced function, so it ticks exactly when
+  XLA retraces) — the serving invariant "swaps never recompile" is testable
+  as ``compile_count`` staying flat across :meth:`swap` calls.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pytree
+from repro.serve.routing import RoutingTable
+from repro.serve.store import ModelStore, Snapshot
+
+PyTree = Any
+
+
+class BatchServer:
+    """Serve batched queries through the routed models of one snapshot.
+
+    Args:
+      apply_fn: ``(params, x) -> outputs`` forward pass of the served model
+        family; must be jit-compatible and per-model stateless (the paper's
+        CNN and the transformer LM both qualify via their ``apply``).
+      snapshot: optional initial :class:`Snapshot` to install.
+    """
+
+    def __init__(self, apply_fn: Callable[[PyTree, jax.Array], jax.Array],
+                 snapshot: Snapshot | None = None):
+        self.apply_fn = apply_fn
+        self._stacked: PyTree | None = None
+        self._table: RoutingTable | None = None
+        self._round: int | None = None
+        self._compiles = 0
+        self._forward_jit = jax.jit(self._forward)
+        if snapshot is not None:
+            self.install(snapshot)
+
+    # -- weight management -----------------------------------------------------
+
+    def install(self, snap: Snapshot) -> None:
+        """(Re)build the stacked models + routing table from a snapshot."""
+        theta = pytree.flatten(snap.global_params)
+        bary = jnp.asarray(snap.barycenters, dtype=theta.dtype)
+        if bary.ndim != 2 or bary.shape[1] != theta.shape[0]:
+            raise ValueError(
+                f"barycenters {bary.shape} do not match the global model's "
+                f"D={theta.shape[0]}")
+        mat = jnp.concatenate([theta[None, :], bary], axis=0)   # (M, D)
+        self._stacked = pytree.matrix_to_stacked(mat, snap.global_params)
+        self._table = RoutingTable.from_snapshot(snap)
+        self._round = snap.round
+
+    def swap(self, snap: Snapshot) -> None:
+        """Hot-swap to a newer snapshot; never recompiles.
+
+        Enforces the invariant behind that guarantee: the incoming
+        snapshot's model avals (leaf shapes/dtypes, coalition count, client
+        population) must match what is installed.  A genuinely different
+        model family is a new :class:`BatchServer`, not a swap.
+        """
+        if self._stacked is None:
+            raise RuntimeError("nothing installed yet; use install()")
+        old_table, old, old_round = self._table, self._stacked, self._round
+        self.install(snap)
+        new = self._stacked
+        same = (jax.tree.structure(old) == jax.tree.structure(new)
+                and all(a.shape == b.shape and a.dtype == b.dtype
+                        for a, b in zip(jax.tree.leaves(old),
+                                        jax.tree.leaves(new)))
+                and old_table.n_clients == self._table.n_clients)
+        if not same:
+            self._stacked, self._table, self._round = old, old_table, old_round
+            raise ValueError(
+                "snapshot is not hot-swappable: model shapes/dtypes or "
+                "population changed (install() a fresh server instead)")
+
+    def poll(self, store: ModelStore) -> bool:
+        """Swap in the store's newest round if it is newer than ours.
+
+        Returns True if a swap happened — the consumer loop of
+        ``launch/serve.py`` is just ``while True: server.poll(store); ...``.
+        """
+        latest = store.latest_round()
+        if latest is None or latest == self._round:
+            return False
+        snap = store.load(latest)
+        if self._stacked is None:
+            self.install(snap)
+        else:
+            self.swap(snap)
+        return True
+
+    # -- inference -------------------------------------------------------------
+
+    def _forward(self, stacked: PyTree, rows: jax.Array,
+                 x: jax.Array) -> jax.Array:
+        # Python side effect executes only while tracing => this counts XLA
+        # compilations, not serve() calls.
+        self._compiles += 1
+        n_models = jax.tree.leaves(stacked)[0].shape[0]
+        outs = jnp.stack([
+            self.apply_fn(jax.tree.map(lambda l: l[m], stacked), x)
+            for m in range(n_models)])                   # (M, B, ...)
+        return outs[rows, jnp.arange(x.shape[0])]        # (B, ...)
+
+    def serve(self, client_ids, x: jax.Array) -> jax.Array:
+        """Answer a batch: query q runs through client_ids[q]'s routed model."""
+        if self._stacked is None:
+            raise RuntimeError("no snapshot installed; publish + install "
+                               "(or poll a ModelStore) first")
+        ids = np.asarray(client_ids).reshape(-1)
+        if ids.shape[0] != x.shape[0]:
+            raise ValueError(
+                f"{ids.shape[0]} client ids for a batch of {x.shape[0]}")
+        rows = jnp.asarray(self._table.model_rows(ids), dtype=jnp.int32)
+        return self._forward_jit(self._stacked, rows, x)
+
+    # -- introspection ---------------------------------------------------------
+
+    def model_params(self, row: int) -> PyTree:
+        """One served model's pytree (row 0 = θ, 1 + k = coalition k)."""
+        if self._stacked is None:
+            raise RuntimeError("no snapshot installed")
+        return jax.tree.map(lambda l: l[row], self._stacked)
+
+    @property
+    def round(self) -> int | None:
+        """Round of the currently served snapshot."""
+        return self._round
+
+    @property
+    def routing(self) -> RoutingTable | None:
+        return self._table
+
+    @property
+    def compile_count(self) -> int:
+        """Number of XLA traces of the serving forward (flat across swaps)."""
+        return self._compiles

@@ -1,0 +1,301 @@
+"""Serving subsystem: ModelStore, coalition routing, batched front end, and
+the producer/consumer + checkpoint/resume contracts of Federation.run.
+
+Uses a tiny linear model so the federation programs compile in seconds; the
+serving invariants under test (bit-exact routing, flat compile counts,
+bit-exact resume) are model-size independent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pytree
+from repro.core.client import ClientConfig
+from repro.core.server import Federation, FederationConfig
+from repro.serve import (GLOBAL, BatchServer, ModelStore, RoutingTable,
+                         Snapshot)
+
+N_CLIENTS, N_COAL, FEAT, CLASSES = 6, 2, 8, 4
+
+
+def _init(key):
+    k1, _ = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (FEAT, CLASSES)) * 0.1,
+            "b": jnp.zeros((CLASSES,))}
+
+
+def _apply(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _loss(p, batch):
+    logp = jax.nn.log_softmax(_apply(p, batch["x"]))
+    return -jnp.mean(jnp.take_along_axis(
+        logp, batch["y"][:, None].astype(jnp.int32), axis=1))
+
+
+@pytest.fixture(scope="module")
+def fed_setup():
+    xs = jax.random.normal(jax.random.key(2), (N_CLIENTS, 8, FEAT))
+    ys = jax.random.randint(jax.random.key(3), (N_CLIENTS, 8), 0, CLASSES)
+    data = {"x": xs, "y": ys}
+    eval_fn = lambda p: jnp.mean(
+        (jnp.argmax(_apply(p, xs[0]), -1) == ys[0]).astype(jnp.float32))
+    cfg = FederationConfig(
+        n_clients=N_CLIENTS, n_coalitions=N_COAL, rounds=6,
+        method="coalition", client=ClientConfig(epochs=1, batch_size=4))
+    params = _init(jax.random.key(1))
+    return cfg, params, data, eval_fn
+
+
+def _fed(cfg, eval_fn):
+    return Federation(_loss, eval_fn, cfg)
+
+
+def _leaves_equal(a, b):
+    return all(bool(jnp.array_equal(x, y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _snapshot(key, round_=0, n=N_CLIENTS):
+    gp = _init(key)
+    d = pytree.flatten(gp).shape[0]
+    bary = jax.random.normal(jax.random.fold_in(key, 7), (N_COAL, d))
+    return Snapshot(round=round_, global_params=gp, barycenters=bary,
+                    assignment=np.arange(n) % N_COAL, counts=None, meta={})
+
+
+class TestRoutingTable:
+    def test_known_unknown_and_rows(self):
+        t = RoutingTable([0, 1, 1, 0], n_coalitions=2)
+        ids = [0, 2, 3, -1, 4, 99]
+        assert t.route(ids).tolist() == [0, 1, 0, GLOBAL, GLOBAL, GLOBAL]
+        # row convention: 0 = global theta, 1 + k = coalition k
+        assert t.model_rows(ids).tolist() == [1, 2, 1, 0, 0, 0]
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="coalition"):
+            RoutingTable([0, 5], n_coalitions=2)
+        with pytest.raises(ValueError, match="GLOBAL"):
+            RoutingTable([0, -3])
+
+    def test_from_snapshot_and_eq(self):
+        s = _snapshot(jax.random.key(0))
+        t = RoutingTable.from_snapshot(s)
+        assert t.n_coalitions == N_COAL and t.n_clients == N_CLIENTS
+        assert t == RoutingTable(s.assignment, n_coalitions=N_COAL)
+
+
+class TestModelStore:
+    def test_publish_load_roundtrip(self, tmp_path):
+        store = ModelStore(str(tmp_path))
+        s = _snapshot(jax.random.key(0), round_=3)
+        store.publish(3, s.global_params, s.barycenters,
+                      assignment=s.assignment, counts=[4, 2],
+                      extra_meta={"engine": "scan"})
+        out = store.load()
+        assert out.round == 3 and out.meta["engine"] == "scan"
+        assert _leaves_equal(s.global_params, out.global_params)
+        assert bool(jnp.array_equal(s.barycenters, out.barycenters))
+        assert out.assignment.tolist() == s.assignment.tolist()
+        assert out.counts.tolist() == [4, 2]
+
+    def test_retention_prunes_oldest(self, tmp_path):
+        store = ModelStore(str(tmp_path), keep=2)
+        s = _snapshot(jax.random.key(0))
+        for r in (0, 2, 4, 6):
+            store.publish(r, s.global_params, s.barycenters,
+                          assignment=s.assignment)
+        assert store.rounds() == [4, 6]
+        assert store.latest_round() == 6
+
+    def test_empty_store(self, tmp_path):
+        assert ModelStore(str(tmp_path)).latest_round() is None
+
+    def test_rejects_plain_checkpoint(self, tmp_path):
+        from repro import checkpoint
+
+        checkpoint.save(str(tmp_path), 0, {"w": jnp.ones((2,))})
+        with pytest.raises(ValueError, match="schema"):
+            ModelStore(str(tmp_path)).load()
+
+    def test_rejects_flat_barycenters(self, tmp_path):
+        s = _snapshot(jax.random.key(0))
+        with pytest.raises(ValueError, match="barycenters"):
+            ModelStore(str(tmp_path)).publish(
+                0, s.global_params, s.barycenters[0],
+                assignment=s.assignment)
+
+
+class TestBatchServer:
+    def test_routed_matches_direct_bitexact(self):
+        s = _snapshot(jax.random.key(0))
+        server = BatchServer(_apply, s)
+        x = jax.random.normal(jax.random.key(5), (8, FEAT))
+        ids = np.array([0, 1, 2, 3, 4, 5, -1, 42])
+        out = server.serve(ids, x)
+        rows = server.routing.model_rows(ids)
+        for q in range(8):
+            direct = _apply(server.model_params(int(rows[q])), x)[q]
+            assert bool(jnp.array_equal(out[q], direct))
+        # unknown clients got the global model
+        gout = _apply(s.global_params, x)
+        assert bool(jnp.array_equal(out[6], gout[6]))
+        assert bool(jnp.array_equal(out[7], gout[7]))
+
+    def test_swap_never_recompiles(self):
+        server = BatchServer(_apply, _snapshot(jax.random.key(0)))
+        x = jax.random.normal(jax.random.key(5), (4, FEAT))
+        ids = np.arange(4)
+        server.serve(ids, x)
+        n0 = server.compile_count
+        assert n0 == 1
+        for r in (1, 2, 3):     # >= 3 hot swaps, answers must change
+            prev = server.serve(ids, x)
+            server.swap(_snapshot(jax.random.key(10 + r), round_=r))
+            assert server.round == r
+            assert not bool(jnp.array_equal(server.serve(ids, x), prev))
+        assert server.compile_count == n0
+        # a different batch size is a legitimate new program, not a swap
+        server.serve(np.arange(6), jax.random.normal(jax.random.key(6),
+                                                     (6, FEAT)))
+        assert server.compile_count == n0 + 1
+
+    def test_swap_rejects_shape_change(self):
+        server = BatchServer(_apply, _snapshot(jax.random.key(0)))
+        bad = _snapshot(jax.random.key(1), round_=5, n=N_CLIENTS + 3)
+        with pytest.raises(ValueError, match="hot-swappable"):
+            server.swap(bad)
+        # server still serves the old snapshot after the rejected swap —
+        # table, weights, AND round (else poll() would skip the retry)
+        assert server.routing.n_clients == N_CLIENTS
+        assert server.round == 0
+
+    def test_serve_requires_snapshot(self):
+        with pytest.raises(RuntimeError, match="no snapshot"):
+            BatchServer(_apply).serve([0], jnp.zeros((1, FEAT)))
+
+    def test_id_batch_mismatch(self):
+        server = BatchServer(_apply, _snapshot(jax.random.key(0)))
+        with pytest.raises(ValueError, match="client ids"):
+            server.serve([0, 1], jnp.zeros((3, FEAT)))
+
+
+ALL_ENGINES = ["scan", "python", "semi_async", "event_driven"]
+
+
+class TestProducerConsumer:
+    @pytest.mark.parametrize("engine", ALL_ENGINES)
+    def test_publisher_hook_all_engines(self, tmp_path, fed_setup, engine):
+        cfg, params, data, eval_fn = fed_setup
+        store = ModelStore(str(tmp_path))
+        gp, _ = _fed(cfg, eval_fn).run(
+            params, data, jax.random.key(0), engine=engine,
+            snapshot_every=2, store=store)
+        # cadence: rounds 0, 2, 4 plus always the final round 5
+        assert store.rounds() == [0, 2, 4, 5]
+        snap = store.load()
+        assert snap.meta["engine"] == engine
+        assert _leaves_equal(gp, snap.global_params)
+        assert snap.barycenters.shape == (N_COAL,
+                                          pytree.flatten(gp).shape[0])
+        assert snap.assignment.shape == (N_CLIENTS,)
+
+    def test_e2e_train_then_serve(self, tmp_path, fed_setup):
+        """The acceptance pair: train publishes, server routes bit-exactly
+        per coalition and hot-swaps >= 3 rounds without recompiling."""
+        cfg, params, data, eval_fn = fed_setup
+        store = ModelStore(str(tmp_path))
+        _fed(cfg, eval_fn).run(params, data, jax.random.key(0),
+                               snapshot_every=2, store=store)
+        server = BatchServer(_apply, store.load(store.rounds()[0]))
+        x = jax.random.normal(jax.random.key(5), (N_CLIENTS, FEAT))
+        ids = np.arange(N_CLIENTS)
+        server.serve(ids, x)
+        n0 = server.compile_count
+        for r in store.rounds()[1:]:        # 3 published swaps
+            server.swap(store.load(r))
+            out = server.serve(ids, x)
+            # routed answer == direct forward through that coalition's
+            # barycenter, bit for bit
+            snap = store.load(r)
+            for q in range(N_CLIENTS):
+                k = int(snap.assignment[q])
+                direct_params = pytree.unflatten(snap.barycenters[k],
+                                                 snap.global_params)
+                assert bool(jnp.array_equal(out[q],
+                                            _apply(direct_params, x)[q]))
+        assert server.compile_count == n0
+        assert server.round == store.latest_round()
+
+    def test_flat_rule_broadcasts_global(self, tmp_path, fed_setup):
+        # fedavg has no coalitions: every published barycenter row is theta
+        cfg, params, data, eval_fn = fed_setup
+        cfg = cfg._replace(method="fedavg", rounds=3)
+        store = ModelStore(str(tmp_path))
+        gp, _ = _fed(cfg, eval_fn).run(params, data, jax.random.key(0),
+                                       snapshot_every=1, store=store)
+        snap = store.load()
+        theta = pytree.flatten(gp)
+        for row in snap.barycenters:
+            assert bool(jnp.array_equal(row, theta))
+
+    def test_hook_validation(self, fed_setup):
+        cfg, params, data, eval_fn = fed_setup
+        fed = _fed(cfg, eval_fn)
+        with pytest.raises(ValueError, match="store"):
+            fed.run(params, data, jax.random.key(0), snapshot_every=2)
+        with pytest.raises(ValueError, match="snapshot_every"):
+            fed.run(params, data, jax.random.key(0), store=object())
+        with pytest.raises(ValueError, match="ckpt_dir"):
+            fed.run(params, data, jax.random.key(0), ckpt_every=2)
+        with pytest.raises(ValueError, match="ckpt_dir"):
+            fed.run(params, data, jax.random.key(0), resume=True)
+        with pytest.raises(ValueError, match="ckpt_every or resume"):
+            fed.run(params, data, jax.random.key(0), ckpt_dir="/tmp/x")
+
+
+class TestCheckpointResume:
+    @pytest.mark.parametrize("engine", ALL_ENGINES)
+    def test_resume_is_bitexact(self, tmp_path, fed_setup, engine):
+        """Kill-and-restart mid-run == uninterrupted run, per engine."""
+        import shutil
+
+        cfg, params, data, eval_fn = fed_setup
+        key = jax.random.key(0)
+        gp_full, h_full = _fed(cfg, eval_fn).run(params, data, key,
+                                                 engine=engine)
+        d = str(tmp_path / engine)
+        _fed(cfg, eval_fn).run(params, data, key, engine=engine,
+                               ckpt_every=2, ckpt_dir=d)
+        from repro import checkpoint
+
+        # simulate the kill: drop every checkpoint after round 2
+        for s in checkpoint.available_steps(d):
+            if s > 2:
+                shutil.rmtree(f"{d}/step_{s:08d}")
+        gp_res, h_res = _fed(cfg, eval_fn).run(params, data, key,
+                                               engine=engine, resume=True,
+                                               ckpt_dir=d)
+        assert _leaves_equal(gp_full, gp_res)
+        assert _leaves_equal(h_full.trace, h_res.trace)
+
+    def test_resume_empty_dir_is_fresh_start(self, tmp_path, fed_setup):
+        cfg, params, data, eval_fn = fed_setup
+        key = jax.random.key(0)
+        gp_full, h_full = _fed(cfg, eval_fn).run(params, data, key)
+        gp_res, h_res = _fed(cfg, eval_fn).run(
+            params, data, key, resume=True, ckpt_dir=str(tmp_path / "new"))
+        assert _leaves_equal(gp_full, gp_res)
+        assert _leaves_equal(h_full.trace, h_res.trace)
+
+    def test_resume_wrong_engine_raises(self, tmp_path, fed_setup):
+        cfg, params, data, eval_fn = fed_setup
+        d = str(tmp_path)
+        _fed(cfg, eval_fn).run(params, data, jax.random.key(0),
+                               engine="scan", ckpt_every=2, ckpt_dir=d)
+        with pytest.raises(ValueError, match="engine"):
+            _fed(cfg, eval_fn).run(params, data, jax.random.key(0),
+                                   engine="semi_async", resume=True,
+                                   ckpt_dir=d)

@@ -165,7 +165,12 @@ class TestCheckpoint:
         st_ = CoalitionState(center_idx=jnp.array([1, 4, 7], jnp.int32),
                              round=jnp.int32(2))
         ckpt.save_federation(str(tmp_path), 2, {"w": jnp.ones(3)}, st_)
+        # federation/v2 schema: strategy state is order-indexed (CoalitionState
+        # flattens to [center_idx, round])
         like = {"global": {"w": jnp.zeros(3)},
-                "centers": jnp.zeros(3, jnp.int32), "round": jnp.int32(0)}
+                "strategy": {"0000": jnp.zeros(3, jnp.int32),
+                             "0001": jnp.int32(0)},
+                "round": jnp.int32(0)}
         back = ckpt.restore(str(tmp_path), like)
-        np.testing.assert_array_equal(back["centers"], [1, 4, 7])
+        np.testing.assert_array_equal(back["strategy"]["0000"], [1, 4, 7])
+        assert int(back["round"]) == 2
