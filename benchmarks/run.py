@@ -21,16 +21,28 @@ import numpy as np
 _JSON: dict = {}
 
 
-def _timeit(fn, *args, reps: int = 5) -> float:
-    """us/call, compile excluded.  Every rep blocks: with async dispatch a
-    loop of un-synced calls only measures enqueue time and lets queued reps
-    under-report (the old bug — one sync at the end timed reps-1 dispatches
-    plus a single execution)."""
-    jax.block_until_ready(fn(*args))             # compile
+def _timeit_full(fn, *args, reps: int = 5) -> tuple[float, float]:
+    """(steady us/call, first-call us) — compile time recorded, not timed in.
+
+    Every steady rep blocks: with async dispatch a loop of un-synced calls
+    only measures enqueue time and lets queued reps under-report (the old
+    bug — one sync at the end timed reps-1 dispatches plus a single
+    execution).  The first call is trace + XLA compile + one execution; it
+    is only a genuine compile measurement if ``fn`` has not run on these
+    avals yet (call ``_timeit_full`` before any warm-up of ``fn``).
+    """
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))             # compile + first run
+    compile_us = (time.perf_counter() - t0) * 1e6
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps * 1e6
+    return (time.perf_counter() - t0) / reps * 1e6, compile_us
+
+
+def _timeit(fn, *args, reps: int = 5) -> float:
+    """Steady-state us/call, compile excluded (see :func:`_timeit_full`)."""
+    return _timeit_full(fn, *args, reps=reps)[0]
 
 
 def _coalition_round_stats(d: int, reps: int) -> dict:
@@ -48,9 +60,11 @@ def _coalition_round_stats(d: int, reps: int) -> dict:
         lambda w_, s: coalitions.run_round(w_, s, fused=False).theta)
     fused = jax.jit(
         lambda w_, s: coalitions.run_round(w_, s, fused=True).theta)
+    # time before any other call so the first-call number really is trace +
+    # compile (the bitwise-agreement check reuses the now-warm executables)
+    us_c, compile_us_c = _timeit_full(composed, w, state, reps=reps)
+    us_f, compile_us_f = _timeit_full(fused, w, state, reps=reps)
     err = float(jnp.max(jnp.abs(composed(w, state) - fused(w, state))))
-    us_c = _timeit(composed, w, state, reps=reps)
-    us_f = _timeit(fused, w, state, reps=reps)
     passes = {}
     for name, fn in (("composed", composed), ("fused", fused)):
         with instrument.count_w_passes() as p:
@@ -59,6 +73,8 @@ def _coalition_round_stats(d: int, reps: int) -> dict:
         passes[name] = p()
     return {"n": 10, "d": d, "k": 3,
             "composed_us": us_c, "fused_us": us_f,
+            "composed_compile_us": compile_us_c,
+            "fused_compile_us": compile_us_f,
             "speedup": us_c / us_f,
             "composed_w_passes": passes["composed"],
             "fused_w_passes": passes["fused"],
@@ -142,13 +158,21 @@ def bench_federation_engines() -> tuple[float, float]:
     fed, params, cd = _tiny_federation(100, "coalition")
     key = jax.random.key(1)
 
-    times = {}
+    times, compiles = {}, {}
     for engine in ("scan", "python"):
+        t0 = time.perf_counter()
         fed.run(params, cd, key, engine=engine)          # compile
+        compiles[engine] = (time.perf_counter() - t0) * 1e6
         t0 = time.perf_counter()
         for _ in range(3):
             fed.run(params, cd, key, engine=engine)
         times[engine] = (time.perf_counter() - t0) / 3 * 1e6
+    _JSON["federation_engines"] = {
+        "rounds": 100,
+        "scan_us": times["scan"], "python_us": times["python"],
+        "scan_compile_us": compiles["scan"],
+        "python_compile_us": compiles["python"],
+        "speedup": times["python"] / times["scan"]}
     return times["scan"], times["python"] / times["scan"]
 
 
@@ -455,6 +479,9 @@ def build_parser() -> argparse.ArgumentParser:
                     default=None, metavar="PATH",
                     help="write structured results (default BENCH_round.json)"
                          " so the perf trajectory accrues per PR")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the bench run "
+                         "here (view in Perfetto / TensorBoard profile)")
     return ap
 
 
@@ -487,15 +514,20 @@ def main() -> None:
     if args.only is not None:
         benches = [(n, f) for n, f in benches if args.only in n]
 
+    import contextlib
+
+    prof = (jax.profiler.trace(args.profile_dir) if args.profile_dir
+            else contextlib.nullcontext())
     print("name,us_per_call,derived")
     failures = []
-    for name, fn in benches:
-        try:
-            us, derived = fn()
-            print(f"{name},{us:.1f},{derived:.6f}", flush=True)
-        except Exception as e:  # pragma: no cover
-            failures.append(name)
-            print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)
+    with prof:
+        for name, fn in benches:
+            try:
+                us, derived = fn()
+                print(f"{name},{us:.1f},{derived:.6f}", flush=True)
+            except Exception as e:  # pragma: no cover
+                failures.append(name)
+                print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)
 
     if args.json is not None:
         _JSON["meta"] = {"backend": jax.default_backend(),

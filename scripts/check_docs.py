@@ -9,9 +9,10 @@ Three checks over README.md and docs/*.md, no Sphinx required:
    invokes a module with a known parser (``repro.launch.train``,
    ``benchmarks.run``) must be an option that parser actually accepts, so
    docs can never reference a flag that was renamed away.
-3. **Quickstart** (``--run-quickstart``) — the commands in README.md fenced
-   blocks under a "Quickstart" heading are executed *as written* from the
-   repo root; they are required to be smoke-scale.
+3. **Quickstart** (``--run-quickstart``) — the commands in fenced blocks
+   under a "Quickstart" heading (README.md and every docs/*.md page) are
+   executed *as written* from the repo root; they are required to be
+   smoke-scale.
 
 Usage:
     PYTHONPATH=src python scripts/check_docs.py [--run-quickstart]
@@ -43,6 +44,8 @@ KNOWN_PARSERS = {
         "benchmarks.run", fromlist=["build_parser"]).build_parser(),
     "repro.launch.serve": lambda: __import__(
         "repro.launch.serve", fromlist=["build_parser"]).build_parser(),
+    "repro.obs.timeline": lambda: __import__(
+        "repro.obs.timeline", fromlist=["build_parser"]).build_parser(),
 }
 
 
@@ -121,27 +124,34 @@ def check_flags(path: Path, text: str, errors: list[str]) -> None:
 
 
 def run_quickstart(errors: list[str]) -> None:
-    text = (ROOT / "README.md").read_text()
+    """Execute every "Quickstart"-headed bash block across all md files.
+
+    README's quickstart plus any doc page that declares one (e.g.
+    docs/observability.md) — so a documented recipe can never silently rot.
+    """
     env = dict(os.environ)
     env["PYTHONPATH"] = f"src{os.pathsep}{env.get('PYTHONPATH', '')}"
     ran = 0
-    for lang, section, block in fenced_blocks(text):
-        if lang not in ("bash", "sh") or "quickstart" not in section.lower():
-            continue
-        for cmd in commands(block):
-            print(f"$ {cmd}", flush=True)
-            ran += 1
-            try:
-                proc = subprocess.run(cmd, shell=True, cwd=ROOT, env=env,
-                                      timeout=900)
-            except subprocess.TimeoutExpired:
-                errors.append(
-                    f"README.md quickstart command timed out (900s): {cmd}")
+    for path in md_files():
+        rel = path.relative_to(ROOT)
+        for lang, section, block in fenced_blocks(path.read_text()):
+            if lang not in ("bash", "sh") \
+                    or "quickstart" not in section.lower():
                 continue
-            if proc.returncode != 0:
-                errors.append(
-                    f"README.md quickstart command failed "
-                    f"(exit {proc.returncode}): {cmd}")
+            for cmd in commands(block):
+                print(f"[{rel}] $ {cmd}", flush=True)
+                ran += 1
+                try:
+                    proc = subprocess.run(cmd, shell=True, cwd=ROOT, env=env,
+                                          timeout=900)
+                except subprocess.TimeoutExpired:
+                    errors.append(
+                        f"{rel} quickstart command timed out (900s): {cmd}")
+                    continue
+                if proc.returncode != 0:
+                    errors.append(
+                        f"{rel} quickstart command failed "
+                        f"(exit {proc.returncode}): {cmd}")
     if ran == 0:
         errors.append("README.md: no runnable Quickstart commands found")
 

@@ -30,6 +30,7 @@ from repro.core import backends as bk
 from repro.core import barycenter as bary_mod
 from repro.core import distance
 from repro.core import fused as fz
+from repro.obs import metrics as obs_metrics
 
 
 class CoalitionState(NamedTuple):
@@ -47,6 +48,7 @@ class CoalitionRound(NamedTuple):
     counts: jax.Array         # (K,) member counts |C_j|
     new_center_idx: jax.Array # (K,) int32 v_j^{r+1}
     theta: jax.Array          # (D,) float32 global model θ^{(r)}
+    radius: jax.Array         # (K,) float32 RMS member->barycenter distance
     state: CoalitionState
 
 
@@ -121,6 +123,7 @@ def run_round(w: jax.Array, state: CoalitionState, *,
         return CoalitionRound(
             assignment=r.assignment, barycenters=r.barycenters,
             counts=r.counts, new_center_idx=r.new_center_idx, theta=r.theta,
+            radius=r.radius,
             state=CoalitionState(center_idx=r.new_center_idx,
                                  round=state.round + 1))
     assignment = assign(w, state.center_idx, backend=backend)
@@ -128,8 +131,12 @@ def run_round(w: jax.Array, state: CoalitionState, *,
     b, counts = bary_mod.barycenters(w, assignment, k, fallback=prev_centers,
                                      backend=backend,
                                      client_weights=client_weights)
-    new_centers = bary_mod.medoids(w, b, assignment, backend=backend,
-                                   client_weights=client_weights)
+    # The medoid election and the intra radius share one client->barycenter
+    # distance matrix (what bary_mod.medoids computes internally), so the
+    # radius adds no W sweep to the composed path either.
+    med_d2 = distance.sq_dists_to_points(w, b, backend=backend)
+    new_centers = fz.medoid_from_d2(med_d2, assignment, client_weights)
+    radius = obs_metrics.intra_radius(med_d2, assignment, k, client_weights)
     theta = bary_mod.global_aggregate(b)
     return CoalitionRound(
         assignment=assignment,
@@ -137,5 +144,6 @@ def run_round(w: jax.Array, state: CoalitionState, *,
         counts=counts,
         new_center_idx=new_centers,
         theta=theta,
+        radius=radius,
         state=CoalitionState(center_idx=new_centers, round=state.round + 1),
     )

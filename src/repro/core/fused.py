@@ -51,6 +51,7 @@ import jax.numpy as jnp
 
 from repro.core import backends as bk
 from repro.core import instrument
+from repro.obs import metrics as obs_metrics
 
 
 class FusedStats(NamedTuple):
@@ -71,6 +72,7 @@ class FusedRound(NamedTuple):
     counts: jax.Array         # (K,) float32
     new_center_idx: jax.Array # (K,) int32 medoid centers v_j^{r+1}
     theta: jax.Array          # (D,) float32
+    radius: jax.Array         # (K,) float32 RMS member->barycenter distance
 
 
 # --- shared glue (the O(N*K) algebra between the two passes) ---------------------
@@ -312,12 +314,18 @@ def fused_round(w: jax.Array, center_idx: jax.Array, *,
     Resolves ``backend.fused_round`` when the backend provides it, else the
     generic :func:`compose_fused_round`; finishes with the shared medoid
     argmin (zero-mass clients excluded — see :func:`medoid_from_d2`).
+
+    The per-coalition intra radius rides along for free: it is O(N·K)
+    algebra over the same accumulated ``med_d2`` that elects the medoids, so
+    the trace-time W-pass count stays exactly 2 (tested).
     """
     backend = bk.get_backend(backend)
     impl = (backend.fused_round if backend.fused_round is not None
             else functools.partial(compose_fused_round, backend))
     s = impl(w, center_idx, client_weights=client_weights, **kw)
     new_center_idx = medoid_from_d2(s.med_d2, s.assignment, client_weights)
+    radius = obs_metrics.intra_radius(s.med_d2, s.assignment,
+                                      center_idx.shape[0], client_weights)
     return FusedRound(assignment=s.assignment, barycenters=s.barycenters,
                       counts=s.counts, new_center_idx=new_center_idx,
-                      theta=s.theta)
+                      theta=s.theta, radius=radius)

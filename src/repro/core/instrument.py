@@ -10,19 +10,25 @@ will execute — no runtime hooks, no profiler dependency.
 Only full (N, D) sweeps are counted.  Small-operand traffic (the (K, D)
 center gather and barycenter re-reads of the composed path) is real but
 K/N-sized; the benchmark JSON reports it qualitatively instead.
+
+The running total lives in a :class:`contextvars.ContextVar`, not a module
+global: nested ``count_w_passes()`` blocks see a consistent snapshot-delta
+each, and concurrent tracing (threads, or ``asyncio``-driven serving that
+traces while a benchmark runs) can't interleave increments across contexts.
 """
 from __future__ import annotations
 
 import contextlib
+import contextvars
 from typing import Callable, Iterator
 
-_W_PASSES = 0
+_W_PASSES: contextvars.ContextVar[int] = contextvars.ContextVar(
+    "repro_w_passes", default=0)
 
 
 def count_w_pass(n: int = 1) -> None:
     """Record ``n`` full sweeps over the (N, D) weight matrix."""
-    global _W_PASSES
-    _W_PASSES += n
+    _W_PASSES.set(_W_PASSES.get() + n)
 
 
 @contextlib.contextmanager
@@ -33,5 +39,5 @@ def count_w_passes() -> Iterator[Callable[[], int]]:
             jax.make_jaxpr(round_fn)(w, state)
         assert passes() == 2
     """
-    start = _W_PASSES
-    yield lambda: _W_PASSES - start
+    start = _W_PASSES.get()
+    yield lambda: _W_PASSES.get() - start

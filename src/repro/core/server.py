@@ -65,6 +65,10 @@ hooks of :meth:`Federation.run`:
   the latest one and continues **bit-for-bit identically** to an
   uninterrupted run — scan composition is exact, the step program is
   unchanged.
+* ``metrics_every=k`` + ``sink`` — stream structured per-round records
+  (the :class:`Trace` row plus the coalition-dynamics block) into a
+  :mod:`repro.obs` sink while the run is live; pure host-side consumption
+  of scan outputs that already exist, so numerics are untouched.
 
 All engines follow the identical PRNG-split discipline (the substrate
 engines draw availability from a *forked* stream via ``fold_in``, leaving
@@ -90,6 +94,8 @@ from repro.core import backends as bk
 from repro.core import pytree, strategies
 from repro.core.client import ClientConfig, client_update
 from repro.core.strategies import RoundMetrics, RoundResult, Strategy
+from repro.obs import ledger as obs_ledger
+from repro.obs import metrics as obs_metrics
 
 PyTree = Any
 
@@ -119,18 +125,27 @@ class FederationConfig(NamedTuple):
 class Trace(NamedTuple):
     """Stacked per-round device arrays for R rounds (the scan outputs).
 
-    The four core metrics are always present; the substrate metrics are
-    filled by the ``semi_async``/``event_driven`` engines and None on the
-    idealized engines.  Under ``event_driven`` a "round" is one completion
-    *event*: ``sim_time`` holds the per-event elapsed seconds (so cumulative
-    sums stay meaningful across engines) and the event-only fields below
-    hold the absolute timestamp and the energy ledger.
+    The core metrics — loss/accuracy, the coalition structure, and the
+    coalition-*dynamics* block (:mod:`repro.obs.metrics`: membership churn
+    vs. the carried previous assignment, size entropy, intra-coalition
+    radius, barycenter drift) — are always present and computed inside the
+    scanned round from quantities the round already materializes (no extra
+    W sweep; the fused path's trace-time pass count stays 2).  The substrate
+    metrics are filled by the ``semi_async``/``event_driven`` engines and
+    None on the idealized engines.  Under ``event_driven`` a "round" is one
+    completion *event*: ``sim_time`` holds the per-event elapsed seconds (so
+    cumulative sums stay meaningful across engines) and the event-only
+    fields below hold the absolute timestamp and the energy ledger.
     """
 
     loss: jax.Array        # (R,)   mean training loss of participating clients
     acc: jax.Array         # (R,)   test accuracy of θ^(r)
     assignment: jax.Array  # (R, N) per-client group id
     counts: jax.Array      # (R, K) group sizes / masses
+    churn: jax.Array       # (R,)   fraction of clients whose group flipped
+    entropy: jax.Array     # (R,)   size-histogram Shannon entropy (nats)
+    radius: jax.Array      # (R, K) RMS member->barycenter distance
+    drift: jax.Array       # (R, K) ‖b_k(r) − b_k(r−1)‖
     sim_time: jax.Array | None = None       # (R,) simulated seconds per round
     wan_bytes: jax.Array | None = None      # (R,) bytes over the WAN link
     edge_bytes: jax.Array | None = None     # (R,) bytes over edge links
@@ -177,6 +192,26 @@ class History:
     @property
     def counts(self) -> list[list[int]]:
         return np.asarray(self.trace.counts).astype(int).tolist()
+
+    @property
+    def churn(self) -> list[float]:
+        """Per-round membership churn vs. the previous round (0.0 at r=0)."""
+        return [float(x) for x in np.asarray(self.trace.churn)]
+
+    @property
+    def entropy(self) -> list[float]:
+        """Per-round coalition-size entropy in nats."""
+        return [float(x) for x in np.asarray(self.trace.entropy)]
+
+    @property
+    def radius(self) -> list[list[float]]:
+        """Per-round per-coalition intra radius (zeros for flat rules)."""
+        return np.asarray(self.trace.radius).astype(float).tolist()
+
+    @property
+    def drift(self) -> list[list[float]]:
+        """Per-round per-coalition barycenter drift (zeros at r=0)."""
+        return np.asarray(self.trace.drift).astype(float).tolist()
 
     @staticmethod
     def _float_list(arr) -> list[float] | None:
@@ -236,6 +271,7 @@ class _ScanCarry(NamedTuple):
     gp: PyTree           # θ^(r) as a model pytree
     state: PyTree        # strategy state
     bary: jax.Array      # (n_groups, D) per-group models of round r
+    prev_assign: jax.Array  # (N,) int32 assignment of round r (churn basis)
 
 
 class _SemiAsyncCarry(NamedTuple):
@@ -243,6 +279,7 @@ class _SemiAsyncCarry(NamedTuple):
     gp: PyTree
     state: PyTree
     bary: jax.Array
+    prev_assign: jax.Array
     buf: jax.Array       # (N, D) last delivered update per client
     tau: jax.Array       # (N,) staleness counters (rounds)
     astate: Any          # availability Markov state (own PRNG stream)
@@ -253,6 +290,7 @@ class _EventCarry(NamedTuple):
     gp: PyTree
     state: PyTree
     bary: jax.Array
+    prev_assign: jax.Array
     buf: jax.Array       # (N, D) last delivered update per client
     last_t: jax.Array    # (N,) sim seconds of each row's delivery
     energy: jax.Array    # (N,) joules remaining
@@ -384,6 +422,28 @@ class Federation:
         return jnp.broadcast_to(res.theta[None, :],
                                 (self.strategy.n_groups, res.theta.shape[0]))
 
+    def _radius_of(self, metrics: RoundMetrics) -> jax.Array:
+        """The strategy's intra radius, zeros when a rule reports None."""
+        if metrics.radius is not None:
+            return metrics.radius
+        return jnp.zeros((self.strategy.n_groups,), jnp.float32)
+
+    def _dynamics_row(self, res: RoundResult, prev_assign: jax.Array,
+                      prev_bary: jax.Array, bary: jax.Array) -> dict:
+        """The coalition-dynamics block of one round's trace row.
+
+        Churn and drift compare against the carried previous round
+        (``prev_assign`` / ``prev_bary``); everything here is O(N·K + K·D)
+        algebra over quantities the round already produced — no W sweep.
+        """
+        return {
+            "churn": obs_metrics.membership_churn(res.metrics.assignment,
+                                                  prev_assign),
+            "entropy": obs_metrics.size_entropy(res.metrics.counts),
+            "radius": self._radius_of(res.metrics),
+            "drift": obs_metrics.barycenter_drift(bary, prev_bary),
+        }
+
     def _round0(self, init_params, client_data, key):
         """Round 0: ω^0 <- ClientUpdate(θ^(0)); strategy state init from ω^0.
 
@@ -397,9 +457,15 @@ class Federation:
         state = self.strategy.init_state(kc, w0)
         res = self.strategy.round(w0, state)
         gp = pytree.unflatten(res.theta, init_params)
+        # Round 0 has no previous round to compare against: churn and drift
+        # are identically 0, entropy/radius are the census partition's own.
         y0 = {"loss": jnp.mean(losses0), "acc": self.eval_fn(gp),
               "assignment": res.metrics.assignment,
-              "counts": res.metrics.counts}
+              "counts": res.metrics.counts,
+              "churn": jnp.float32(0.0),
+              "entropy": obs_metrics.size_entropy(res.metrics.counts),
+              "radius": self._radius_of(res.metrics),
+              "drift": jnp.zeros((self.strategy.n_groups,), jnp.float32)}
         return key, gp, res.state, self._bary_of(res), w0, y0
 
     @functools.cached_property
@@ -420,7 +486,7 @@ class Federation:
     def _prologue_scan(self, init_params, client_data, key):
         key, gp, state, bary, _, y0 = self._round0_jit(
             init_params, client_data, key)
-        return _ScanCarry(key, gp, state, bary), y0
+        return _ScanCarry(key, gp, state, bary, y0["assignment"]), y0
 
     def _prologue_semi_async(self, init_params, client_data, key):
         # Fork the availability stream off the run key WITHOUT consuming
@@ -441,7 +507,8 @@ class Federation:
         y0 = dict(y0, sim_time=t0, wan_bytes=wan0, edge_bytes=edge0,
                   participation=mask0.astype(jnp.float32))
         tau0 = jnp.zeros((self.cfg.n_clients,), jnp.int32)
-        return _SemiAsyncCarry(key, gp, state, bary, w0, tau0, astate), y0
+        return _SemiAsyncCarry(key, gp, state, bary, y0["assignment"], w0,
+                               tau0, astate), y0
 
     def _prologue_event_driven(self, init_params, client_data, key):
         scfg, n = self.cfg.sim, self.cfg.n_clients
@@ -477,8 +544,8 @@ class Federation:
                   energy_spent=spent0,
                   energy_exhausted=jnp.logical_not(alive0).astype(
                       jnp.float32))
-        return _EventCarry(key, gp, state, bary, w0, last_t0, energy0,
-                           spent0, next_t0, t0, astate), y0
+        return _EventCarry(key, gp, state, bary, y0["assignment"], w0,
+                           last_t0, energy0, spent0, next_t0, t0, astate), y0
 
     # -- engine step programs (one scanned round / event) --------------------------
 
@@ -491,10 +558,14 @@ class Federation:
             res = strategy.round(w, carry.state)
             gp = pytree.unflatten(res.theta, carry.gp)
             acc = self.eval_fn(gp)
+            bary = self._bary_of(res)
             y = {"loss": jnp.mean(losses), "acc": acc,
                  "assignment": res.metrics.assignment,
-                 "counts": res.metrics.counts}
-            return _ScanCarry(key, gp, res.state, self._bary_of(res)), y
+                 "counts": res.metrics.counts,
+                 **self._dynamics_row(res, carry.prev_assign, carry.bary,
+                                      bary)}
+            return _ScanCarry(key, gp, res.state, bary,
+                              res.metrics.assignment), y
 
         return step
 
@@ -541,13 +612,17 @@ class Federation:
                 mask, dev_time, model_bytes,
                 strategy.n_groups, strategy.hierarchical,
                 deadline=scfg.deadline)
+            bary = self._bary_of(res)
             y = {"loss": loss, "acc": acc,
                  "assignment": res.metrics.assignment,
                  "counts": res.metrics.counts,
+                 **self._dynamics_row(res, carry.prev_assign, carry.bary,
+                                      bary),
                  "sim_time": sim_t, "wan_bytes": wan, "edge_bytes": edge,
                  "participation": m}
-            return _SemiAsyncCarry(key, gp, res.state, self._bary_of(res),
-                                   buf, tau, astate), y
+            return _SemiAsyncCarry(key, gp, res.state, bary,
+                                   res.metrics.assignment, buf, tau,
+                                   astate), y
 
         return step
 
@@ -615,17 +690,20 @@ class Federation:
             _, wan, edge = sim_mod.round_stats(
                 deliver, dev_time, model_bytes,
                 strategy.n_groups, strategy.hierarchical)
+            bary = self._bary_of(res)
             y = {"loss": loss, "acc": acc,
                  "assignment": res.metrics.assignment,
                  "counts": res.metrics.counts,
+                 **self._dynamics_row(res, carry.prev_assign, carry.bary,
+                                      bary),
                  "sim_time": t_now - carry.clock, "wan_bytes": wan,
                  "edge_bytes": edge, "participation": m,
                  "event_time": t_now, "energy_spent": spent,
                  "energy_exhausted": jnp.logical_not(alive).astype(
                      jnp.float32)}
-            return _EventCarry(key, gp, res.state, self._bary_of(res), buf,
-                               last_t, energy, spent, next_t, t_now,
-                               astate), y
+            return _EventCarry(key, gp, res.state, bary,
+                               res.metrics.assignment, buf, last_t, energy,
+                               spent, next_t, t_now, astate), y
 
         return step
 
@@ -677,6 +755,48 @@ class Federation:
                       extra_meta={"engine": name, "method": self.cfg.method,
                                   "n_clients": self.cfg.n_clients})
 
+    # -- streaming run ledger ------------------------------------------------------
+
+    def _run_meta_record(self, name: str, carry) -> dict:
+        """The ledger's ``run_meta`` header (first record of every run).
+
+        On the substrate engines it carries the per-device cycle seconds —
+        what :mod:`repro.obs.timeline` uses to draw device busy spans.
+        """
+        cfg = self.cfg
+        rec = {"schema": obs_ledger.OBS_SCHEMA, "kind": obs_ledger.RUN_META,
+               "engine": name, "method": cfg.method,
+               "n_clients": cfg.n_clients,
+               "n_groups": self.strategy.n_groups,
+               "steps": self._n_steps(name) + 1}
+        if hasattr(carry, "buf"):
+            model_bytes = carry.buf.shape[1] * bytes_per_param(carry.buf)
+            rec.update(
+                fleet=cfg.sim.fleet, scenario=cfg.sim.scenario,
+                model_bytes=int(model_bytes),
+                device_time_s=sim_mod.device_round_time(
+                    self._fleet, model_bytes, cfg.sim.local_work))
+        return rec
+
+    def _emit_rows(self, sink, part, r_start: int, metrics_every: int,
+                   total: int) -> None:
+        """Emit one ``round`` record per trace row the cadence selects.
+
+        ``part`` is a stacked y-dict fresh off a chunk (or the prologue /
+        a restored trace) whose row ``i`` is round ``r_start + i``.  Runs
+        strictly between jitted chunks on the host — the scanned program
+        never sees the sink.
+        """
+        rows = int(np.shape(jax.tree.leaves(part)[0])[0])
+        for i in range(rows):
+            r = r_start + i
+            if not self._fires(r, metrics_every, total):
+                continue
+            rec = {"schema": obs_ledger.OBS_SCHEMA, "kind": obs_ledger.ROUND,
+                   "round": r}
+            rec.update({k: v[i] for k, v in part.items()})
+            sink.emit(rec)
+
     def _save_ckpt(self, ckpt_dir: str, name: str, round_: int, carry,
                    parts: list) -> None:
         from repro import checkpoint
@@ -723,7 +843,8 @@ class Federation:
 
     def _run_driver(self, name, init_params, client_data, key, *,
                     snapshot_every=None, store=None,
-                    ckpt_every=None, ckpt_dir=None, resume=False):
+                    ckpt_every=None, ckpt_dir=None, resume=False,
+                    metrics_every=None, sink=None):
         total = self._n_steps(name)
         carry, y0 = getattr(self, f"_prologue_{self._spec_of(name)}")(
             init_params, client_data, key)
@@ -740,6 +861,12 @@ class Federation:
                 self._publish(store, name, 0, carry, y0)
             if self._fires(0, ckpt_every, total):
                 self._save_ckpt(ckpt_dir, name, 0, carry, parts)
+        if sink is not None:
+            sink.emit(self._run_meta_record(name, carry))
+            # covers round 0 on a fresh start; on resume the restored trace
+            # is re-emitted so the ledger is complete from round 0 whichever
+            # checkpoint the run picked up at
+            self._emit_rows(sink, parts[0], 0, metrics_every, total)
 
         if name == "python":
             boundaries = list(range(r_done + 1, total + 1))
@@ -747,11 +874,14 @@ class Federation:
             boundaries = sorted(
                 r for r in range(r_done + 1, total + 1)
                 if r == total or self._fires(r, snapshot_every, total)
-                or self._fires(r, ckpt_every, total))
+                or self._fires(r, ckpt_every, total)
+                or self._fires(r, metrics_every, total))
         for r in boundaries:
             carry, ys = self._chunk_program(name, r - r_done)(
                 carry, client_data)
             parts.append(ys)
+            if sink is not None:
+                self._emit_rows(sink, ys, r_done + 1, metrics_every, total)
             r_done = r
             if self._fires(r, snapshot_every, total):
                 row = jax.tree.map(lambda a: a[-1], ys)
@@ -767,7 +897,9 @@ class Federation:
             *, engine: str | None = None,
             snapshot_every: int | None = None, store=None,
             ckpt_every: int | None = None, ckpt_dir: str | None = None,
-            resume: bool = False) -> tuple[PyTree, History]:
+            resume: bool = False,
+            metrics_every: int | None = None,
+            sink: obs_ledger.Sink | None = None) -> tuple[PyTree, History]:
         """Run the full federation; returns (final θ pytree, History).
 
         Args:
@@ -792,6 +924,14 @@ class Federation:
             continue — bit-for-bit identical to the uninterrupted run (the
             checkpoint carries the full engine carry; an empty directory is
             just a fresh start).
+          metrics_every: stream a structured ``round`` record into ``sink``
+            every ``metrics_every`` rounds (plus round 0 and the final
+            round) — live telemetry at the same chunk boundaries that power
+            snapshots/checkpoints, with zero effect on traced numerics.
+            Requires ``sink``; a ``sink`` alone defaults to every round.
+          sink: a :class:`repro.obs.Sink` (``repro.obs.make_sink``); the
+            run opens with one ``run_meta`` record, then per-round records.
+            The caller owns the sink's lifetime (it is not closed here).
         """
         name = engine if engine is not None else self.cfg.engine
         if name not in self._ENGINES:
@@ -816,10 +956,20 @@ class Federation:
                              "would never write a checkpoint")
         if resume and ckpt_dir is None:
             raise ValueError("resume requires ckpt_dir")
+        if metrics_every is not None:
+            if metrics_every < 1:
+                raise ValueError(
+                    f"metrics_every={metrics_every} must be >= 1")
+            if sink is None:
+                raise ValueError("metrics_every requires a sink "
+                                 "(repro.obs.make_sink)")
+        elif sink is not None:
+            metrics_every = 1                   # a sink alone: every round
         return self._run_driver(name, init_params, client_data, key,
                                 snapshot_every=snapshot_every, store=store,
                                 ckpt_every=ckpt_every, ckpt_dir=ckpt_dir,
-                                resume=resume)
+                                resume=resume, metrics_every=metrics_every,
+                                sink=sink)
 
 
 def run_federation(init_params: PyTree,

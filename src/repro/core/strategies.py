@@ -63,10 +63,18 @@ PyTree = Any
 
 class RoundMetrics(NamedTuple):
     """Per-round observables every strategy reports (uniform across rules so
-    the scanned engine can stack them into a :class:`~repro.core.server.History`)."""
+    the scanned engine can stack them into a :class:`~repro.core.server.History`).
+
+    ``radius`` is the coalition-dynamics observable coalition rules get for
+    free out of the round's already-accumulated client->barycenter distances
+    (:func:`repro.obs.metrics.intra_radius`); flat rules report zeros.  The
+    engine derives the rest of the dynamics block (churn, size entropy,
+    barycenter drift) itself from carried previous-round quantities.
+    """
 
     assignment: jax.Array   # (N,) int32 group id per client (0 if ungrouped)
     counts: jax.Array       # (n_groups,) float32 group sizes / masses
+    radius: jax.Array | None = None   # (n_groups,) float32 intra radius
 
 
 class RoundResult(NamedTuple):
@@ -129,7 +137,8 @@ class Strategy(abc.ABC):
         counts = jnp.zeros((self.n_groups,), jnp.float32)
         counts = counts.at[0].set(mass)
         return RoundMetrics(
-            assignment=jnp.zeros((self.n_clients,), jnp.int32), counts=counts)
+            assignment=jnp.zeros((self.n_clients,), jnp.int32), counts=counts,
+            radius=jnp.zeros((self.n_groups,), jnp.float32))
 
 
 # --- registry --------------------------------------------------------------------
@@ -258,7 +267,8 @@ class CoalitionStrategy(Strategy):
         r = self._coalition_round(w, state, mask)
         return RoundResult(theta=r.theta, state=r.state,
                            metrics=RoundMetrics(assignment=r.assignment,
-                                                counts=r.counts),
+                                                counts=r.counts,
+                                                radius=r.radius),
                            barycenters=r.barycenters)
 
 
@@ -282,7 +292,8 @@ class TopKCoalitionStrategy(CoalitionStrategy):
         theta = jnp.mean(r.barycenters[top_idx], axis=0)
         return RoundResult(theta=theta, state=r.state,
                            metrics=RoundMetrics(assignment=r.assignment,
-                                                counts=r.counts),
+                                                counts=r.counts,
+                                                radius=r.radius),
                            barycenters=r.barycenters)
 
 

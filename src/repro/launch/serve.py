@@ -118,17 +118,38 @@ def run_fl_serve(args) -> dict:
     # every batch exercises both coalition routing and the global fallback
     ids = np.arange(args.batch) % (n_known + 1)
     ids = np.where(ids == n_known, -1, ids)
+    # the serve-side run ledger: one serve_batch record per answered batch
+    # (same sink contract as the training ledger — see docs/observability.md)
+    from repro import obs
+
+    sink = (obs.make_sink("jsonl", path=args.metrics_out)
+            if args.metrics_out else None)
     swaps = served = 0
     checksum = 0.0
     t0 = time.time()
     for i in range(args.repeat):
         swaps += int(server.poll(store))      # hot-swap newer rounds
+        tb = time.perf_counter()
         out = server.serve(ids, make_queries(args.batch, args.seed + i))
         served += int(out.shape[0])
         checksum += float(jnp.sum(out))       # blocks; keeps timing honest
+        if sink is not None:
+            c = server.stats
+            sink.emit({
+                "schema": obs.OBS_SCHEMA, "kind": obs.SERVE_BATCH,
+                "batch": i, "round": server.round,
+                "batch_ms": round((time.perf_counter() - tb) * 1e3, 3),
+                **c,
+                "poll_hit_rate": round(c["poll_hits"] / max(c["polls"], 1),
+                                       4),
+                "fallback_rate": round(
+                    c["fallback_queries"] / max(c["queries"], 1), 4)})
     wall = time.time() - t0
+    if sink is not None:
+        sink.close()
     assert np.isfinite(checksum), "served logits contain NaN/Inf"
     routes = server.routing.route(ids)
+    c = server.stats
     stats = {
         "mode": "fl", "model": args.model, "store": args.store_dir,
         "round": server.round, "published_rounds": store.rounds(),
@@ -138,7 +159,13 @@ def run_fl_serve(args) -> dict:
         "global_fallback_queries": int(np.sum(routes == GLOBAL)),
         "hot_swaps": swaps,
         "compile_count": server.compile_count,
+        "swap_ms_mean": round(c["swap_ms_total"] / max(c["swaps"], 1), 3),
+        "poll_hit_rate": round(c["poll_hits"] / max(c["polls"], 1), 4),
+        "fallback_rate": round(c["fallback_queries"] / max(c["queries"], 1),
+                               4),
     }
+    if args.metrics_out:
+        stats["metrics_out"] = args.metrics_out
     print(json.dumps(stats, indent=1))
     return stats
 
@@ -196,6 +223,10 @@ def build_parser() -> argparse.ArgumentParser:
                          "for newer rounds between batches)")
     ap.add_argument("--wait", type=float, default=0.0,
                     help="seconds to wait for the first published snapshot")
+    ap.add_argument("--metrics-out", default=None,
+                    help="stream per-batch serve counters (queries/s, swap "
+                         "latency, poll hit/miss, routing fallback rate) to "
+                         "this JSONL file via the repro.obs ledger")
     return ap
 
 

@@ -25,6 +25,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 
@@ -34,6 +35,18 @@ import numpy as np
 
 from repro.core import strategies
 from repro.data import partition
+
+
+def _profiler(profile_dir: str | None):
+    """``jax.profiler`` trace context when ``--profile-dir`` is set.
+
+    Real-hardware time; the simulated-time view is ``--trace-out``
+    (:mod:`repro.obs.timeline`).  Open the written trace in Perfetto or
+    TensorBoard's profile plugin.
+    """
+    if profile_dir is None:
+        return contextlib.nullcontext()
+    return jax.profiler.trace(profile_dir)
 
 
 # which strategies actually consume each CLI hyper-parameter — factories
@@ -119,11 +132,30 @@ def run_fl(args) -> dict:
     ckpt_every = args.ckpt_every
     if args.ckpt_dir is not None and ckpt_every is None and not args.resume:
         ckpt_every = args.rounds
-    _, hist = fed.run(
-        params, cd, jax.random.key(args.seed + 1),
-        snapshot_every=(args.snapshot_every if store is not None else None),
-        store=store, ckpt_every=ckpt_every, ckpt_dir=args.ckpt_dir,
-        resume=args.resume)
+    # Streaming telemetry: --metrics-out writes the per-round ledger as
+    # JSONL live; --trace-out additionally collects it in memory for the
+    # simulated-time Perfetto export after the run.
+    from repro import obs
+
+    sinks, mem = [], None
+    if args.metrics_out:
+        sinks.append(obs.make_sink("jsonl", path=args.metrics_out))
+    if args.trace_out:
+        mem = obs.InMemorySink()
+        sinks.append(mem)
+    sink = obs.tee(sinks)
+    if args.metrics_every is not None and sink is None:
+        raise SystemExit("--metrics-every requires --metrics-out or "
+                         "--trace-out")
+    with _profiler(args.profile_dir):
+        _, hist = fed.run(
+            params, cd, jax.random.key(args.seed + 1),
+            snapshot_every=(args.snapshot_every if store is not None
+                            else None),
+            store=store, ckpt_every=ckpt_every, ckpt_dir=args.ckpt_dir,
+            resume=args.resume, metrics_every=args.metrics_every, sink=sink)
+    if sink is not None:
+        sink.close()
     out = {"mode": "fl", "method": args.method, "engine": args.engine,
            "regime": args.regime,
            "scenario": args.scenario, "rho": args.rho,
@@ -134,7 +166,25 @@ def run_fl(args) -> dict:
            "test_acc": hist.test_acc, "train_loss": hist.train_loss,
            "final_assignment": hist.assignments[-1],
            "final_counts": hist.counts[-1],
+           # coalition-dynamics summaries (repro.obs.metrics; per-round
+           # series are in the --metrics-out ledger / History)
+           "mean_churn": round(float(np.mean(hist.churn)), 4),
+           "final_entropy": round(hist.entropy[-1], 4),
+           "mean_drift": round(float(np.mean(hist.drift)), 6),
            "wall_s": round(time.time() - t0, 1)}
+    if args.metrics_out:
+        out["metrics_out"] = args.metrics_out
+    if args.profile_dir:
+        out["profile_dir"] = args.profile_dir
+    if args.trace_out:
+        from repro.obs import timeline
+
+        try:
+            trace = timeline.write_trace(args.trace_out, mem.records)
+        except ValueError as e:
+            raise SystemExit(f"--trace-out: {e}") from None
+        out["trace_out"] = args.trace_out
+        out["trace_events"] = len(trace["traceEvents"])
     if store is not None:
         out["snapshot_dir"] = args.snapshot_dir
         out["published_rounds"] = store.rounds()
@@ -190,18 +240,19 @@ def run_pretrain(args) -> dict:
                                cfg.vocab, seed=args.seed)
     losses = []
     t0 = time.time()
-    for i in range(args.steps):
-        batch = {"tokens": jnp.asarray(
-            toks[i * args.batch_size:(i + 1) * args.batch_size])}
-        if cfg.modality:
-            batch["modal"] = jax.random.normal(
-                jax.random.key(i), (args.batch_size, cfg.n_modal_tokens,
-                                    cfg.d_modal), jnp.float32)
-        params, opt_state, loss = step_jit(params, opt_state, batch)
-        losses.append(float(loss))
-        if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
-            print(f"step {i:5d}  loss {losses[-1]:.4f}  "
-                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    with _profiler(args.profile_dir):
+        for i in range(args.steps):
+            batch = {"tokens": jnp.asarray(
+                toks[i * args.batch_size:(i + 1) * args.batch_size])}
+            if cfg.modality:
+                batch["modal"] = jax.random.normal(
+                    jax.random.key(i), (args.batch_size, cfg.n_modal_tokens,
+                                        cfg.d_modal), jnp.float32)
+            params, opt_state, loss = step_jit(params, opt_state, batch)
+            losses.append(float(loss))
+            if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+                print(f"step {i:5d}  loss {losses[-1]:.4f}  "
+                      f"({(time.time()-t0)/(i+1):.2f}s/step)")
     out = {"mode": "pretrain", "arch": cfg.name, "losses": losses,
            "loss_first": losses[0], "loss_last": losses[-1],
            "wall_s": round(time.time() - t0, 1)}
@@ -279,6 +330,22 @@ def build_parser() -> argparse.ArgumentParser:
                     help="publish cadence in rounds (with --snapshot-dir)")
     ap.add_argument("--snapshot-keep", type=int, default=None,
                     help="retain only the newest N snapshots")
+    # fl: observability (repro.obs)
+    ap.add_argument("--metrics-out", default=None,
+                    help="stream the per-round run ledger to this JSONL "
+                         "file while training (repro.obs jsonl sink); "
+                         "tail it live")
+    ap.add_argument("--metrics-every", type=int, default=None,
+                    help="ledger cadence in rounds (default 1; round 0 and "
+                         "the final round always emit)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a simulated-time Chrome trace-event JSON "
+                         "(open in https://ui.perfetto.dev); needs "
+                         "--engine semi_async or event_driven")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the run here "
+                         "(real hardware time, vs. the simulated-time "
+                         "--trace-out)")
     # fl: joint fleet+data scenarios (repro.sim.scenarios)
     ap.add_argument("--scenario", default="independent",
                     help="joint fleet+data scenario (see "

@@ -1,0 +1,41 @@
+"""repro.obs — observability for the coalition federation.
+
+Three parts, one subsystem:
+
+  :mod:`repro.obs.metrics`   — in-scan coalition-dynamics metrics (churn,
+                               size entropy, intra radius, barycenter
+                               drift), jittable and W-sweep-free.
+  :mod:`repro.obs.ledger`    — the streaming run ledger: structured
+                               per-round / per-batch records and the sink
+                               registry (``jsonl`` | ``stdout`` |
+                               ``in_memory``) that receives them live at
+                               chunked-scan boundaries.
+  :mod:`repro.obs.timeline`  — simulated-time Chrome trace-event export
+                               (Perfetto): device tracks, coalition tracks,
+                               telemetry counters.
+
+``repro.core`` imports :mod:`repro.obs.metrics`; nothing in this package
+imports ``repro.core`` back.
+"""
+from repro.obs.ledger import (  # noqa: F401
+    OBS_SCHEMA,
+    ROUND,
+    RUN_META,
+    SERVE_BATCH,
+    InMemorySink,
+    JsonlSink,
+    Sink,
+    StdoutSink,
+    TeeSink,
+    available_sinks,
+    coerce,
+    make_sink,
+    register_sink,
+    tee,
+)
+from repro.obs.metrics import (  # noqa: F401
+    barycenter_drift,
+    intra_radius,
+    membership_churn,
+    size_entropy,
+)

@@ -1,0 +1,98 @@
+"""In-scan coalition-dynamics metrics (pure O(N·K) algebra, no W sweeps).
+
+The paper's thesis is that coalition structure *evolves* with the Euclidean
+geometry of the client weights — yet assignments, masses, and barycenters
+used to be computed every round and discarded.  These functions turn the
+quantities the fused round already materializes (the assignment vector, the
+coalition masses, the (N, K) client→barycenter distances, and the carried
+previous round's assignment/barycenters) into per-round dynamics
+observables:
+
+  :func:`membership_churn`   — fraction of clients whose coalition flipped
+                               versus the previous round's assignment.
+  :func:`size_entropy`       — Shannon entropy (nats) of the coalition-size
+                               distribution; log K for a perfectly balanced
+                               partition, 0 when one coalition holds
+                               everyone.
+  :func:`intra_radius`       — per-coalition RMS distance of members to
+                               their own barycenter (the coalition's spread
+                               in weight space).
+  :func:`barycenter_drift`   — per-coalition ‖b_k(r) − b_k(r−1)‖ (how far
+                               each coalition's model moved this round).
+
+Every function is jittable and shape-static so the engines compute them
+*inside* the scanned round program, and none of them touches the (N, D)
+weight matrix — the fused round's trace-time W-pass count stays exactly 2
+(asserted in ``tests/test_obs.py``).  This module must not import
+``repro.core`` (the core round imports it).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: far below any real (even staleness-decayed fractional) coalition mass;
+#: only dodges 0/0 on empty coalitions, mirroring the barycenter clamp
+_EPS = 1e-12
+
+
+def membership_churn(assignment: jax.Array,
+                     prev_assignment: jax.Array) -> jax.Array:
+    """Fraction of clients whose coalition id flipped since last round.
+
+    0.0 when the partition is frozen (every flat rule, or a converged
+    coalition run); 1.0 when every client moved.  Coalition ids are compared
+    literally — a pure relabelling counts as churn, which is the honest
+    reading of the paper's center recurrence (centers carry identity, so a
+    stable partition keeps its labels).
+    """
+    flipped = (assignment != prev_assignment).astype(jnp.float32)
+    return jnp.mean(flipped)
+
+
+def size_entropy(counts: jax.Array) -> jax.Array:
+    """Shannon entropy (nats) of the coalition-size/mass histogram.
+
+    ``counts`` may be fractional (staleness-decayed masses under the
+    substrate engines).  Zero-mass coalitions contribute 0 (the 0·log 0
+    limit), and an all-empty histogram reports 0.0 rather than NaN.
+    """
+    c = jnp.maximum(counts.astype(jnp.float32), 0.0)
+    total = jnp.maximum(jnp.sum(c), _EPS)
+    p = c / total
+    return -jnp.sum(jnp.where(p > 0, p * jnp.log(jnp.maximum(p, _EPS)), 0.0))
+
+
+def intra_radius(med_d2: jax.Array, assignment: jax.Array, k: int,
+                 client_weights: jax.Array | None = None) -> jax.Array:
+    """(K,) per-coalition RMS member→barycenter distance.
+
+    ``med_d2`` is the (N, K) squared-distance matrix the round's pass 2
+    already accumulates for the medoid election — reading column j restricted
+    to coalition j's members gives the coalition's spread for free (no
+    additional sweep over W).  ``client_weights``: optional (N,) effective
+    masses (the participation/staleness contract) — the radius weights
+    members the same way the barycenter did, and zero-mass clients drop out.
+    Empty coalitions report 0.0.
+    """
+    member = (assignment[:, None] == jnp.arange(k, dtype=assignment.dtype)
+              [None, :]).astype(jnp.float32)                       # (N, K)
+    if client_weights is not None:
+        member = member * jnp.maximum(
+            client_weights.astype(jnp.float32), 0.0)[:, None]
+    mass = jnp.sum(member, axis=0)                                 # (K,)
+    mean_d2 = (jnp.sum(member * jnp.maximum(med_d2, 0.0), axis=0)
+               / jnp.maximum(mass, _EPS))
+    return jnp.sqrt(jnp.where(mass > 0, mean_d2, 0.0))
+
+
+def barycenter_drift(bary: jax.Array, prev_bary: jax.Array) -> jax.Array:
+    """(K,) Euclidean distance each barycenter moved since last round.
+
+    ``‖b_k(r) − b_k(r−1)‖`` over the (K, D) barycenter matrices — K·D work,
+    never an (N, D) sweep.  Flat rules broadcast θ to every group, so their
+    "drift" is ‖θ^(r) − θ^(r−1)‖ per group: exactly 0 under a frozen
+    learning rate (tested).
+    """
+    diff = bary.astype(jnp.float32) - prev_bary.astype(jnp.float32)
+    return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=1), 0.0))

@@ -29,6 +29,7 @@ Design:
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Callable
 
 import jax
@@ -36,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pytree
-from repro.serve.routing import RoutingTable
+from repro.serve.routing import GLOBAL, RoutingTable
 from repro.serve.store import ModelStore, Snapshot
 
 PyTree = Any
@@ -59,6 +60,13 @@ class BatchServer:
         self._table: RoutingTable | None = None
         self._round: int | None = None
         self._compiles = 0
+        # Serve-side telemetry, strictly host-side (read by ``stats`` and
+        # the ``launch/serve.py`` ledger) — nothing here is visible to the
+        # traced forward, so attaching counters can never retrace it
+        # (``compile_count`` stays flat; tested).
+        self._counters = {"polls": 0, "poll_hits": 0, "swaps": 0,
+                          "swap_ms_total": 0.0, "batches": 0, "queries": 0,
+                          "fallback_queries": 0}
         self._forward_jit = jax.jit(self._forward)
         if snapshot is not None:
             self.install(snapshot)
@@ -108,14 +116,19 @@ class BatchServer:
         Returns True if a swap happened — the consumer loop of
         ``launch/serve.py`` is just ``while True: server.poll(store); ...``.
         """
+        self._counters["polls"] += 1
         latest = store.latest_round()
         if latest is None or latest == self._round:
             return False
         snap = store.load(latest)
+        t0 = time.perf_counter()
         if self._stacked is None:
             self.install(snap)
         else:
             self.swap(snap)
+        self._counters["poll_hits"] += 1
+        self._counters["swaps"] += 1
+        self._counters["swap_ms_total"] += (time.perf_counter() - t0) * 1e3
         return True
 
     # -- inference -------------------------------------------------------------
@@ -140,6 +153,10 @@ class BatchServer:
         if ids.shape[0] != x.shape[0]:
             raise ValueError(
                 f"{ids.shape[0]} client ids for a batch of {x.shape[0]}")
+        self._counters["batches"] += 1
+        self._counters["queries"] += int(ids.shape[0])
+        self._counters["fallback_queries"] += int(
+            np.sum(self._table.route(ids) == GLOBAL))
         rows = jnp.asarray(self._table.model_rows(ids), dtype=jnp.int32)
         return self._forward_jit(self._stacked, rows, x)
 
@@ -164,3 +181,17 @@ class BatchServer:
     def compile_count(self) -> int:
         """Number of XLA traces of the serving forward (flat across swaps)."""
         return self._compiles
+
+    @property
+    def stats(self) -> dict:
+        """Host-side serve counters (cumulative since construction).
+
+        ``polls``/``poll_hits`` (poll calls vs. polls that found a newer
+        round), ``swaps`` + ``swap_ms_total`` (hot-swap count and cumulative
+        install latency), ``batches``/``queries``, ``fallback_queries``
+        (routed to the global θ because the client was unknown), and
+        ``compiles``.  Feed it to the :mod:`repro.obs` ledger as a
+        ``serve_batch`` record — reading it never touches the traced
+        forward.
+        """
+        return dict(self._counters, compiles=self._compiles)

@@ -1,0 +1,373 @@
+"""Observability layer (`repro.obs`): coalition-dynamics metrics, the
+streaming run ledger, and the Perfetto timeline exporter.
+
+The load-bearing invariant, asserted across the full engine x strategy
+matrix: attaching any sink leaves the trained federation **bit-for-bit
+identical** — final θ and every field of the History — because telemetry
+is host-side consumption of scan outputs at chunk boundaries, never a
+change to the traced program.  Also covered: the contextvar W-pass
+counter (nesting + thread isolation), the in-trace dynamics metrics
+(churn / entropy / radius / drift) on both the fused and composed
+coalition paths with the two-pass contract intact, the sink registry,
+serve-side counters never retracing the forward, and trace-event JSON
+schema validation.
+"""
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs, sim
+from repro.core import coalitions, instrument, pytree, strategies
+from repro.core.client import ClientConfig
+from repro.core.server import Federation, FederationConfig
+from repro.obs import timeline
+
+N_CLIENTS, N_LOCAL, DIM = 6, 20, 12
+ENGINES = ("scan", "python", "semi_async", "event_driven")
+
+
+@pytest.fixture(scope="module")
+def lsq():
+    """Tiny least-squares federation problem (fast to compile)."""
+    kx, kw, kt = jax.random.split(jax.random.key(0), 3)
+    x = jax.random.normal(kx, (N_CLIENTS, N_LOCAL, DIM))
+    w_true = jax.random.normal(kw, (DIM,))
+    y = x @ w_true + 0.1 * jax.random.normal(kt, (N_CLIENTS, N_LOCAL))
+
+    def loss_fn(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    xe = x.reshape(-1, DIM)[:40]
+    ye = (x @ w_true).reshape(-1)[:40]
+    eval_fn = lambda p: -jnp.mean((xe @ p["w"] - ye) ** 2)
+    return loss_fn, eval_fn, {"x": x, "y": y}, {"w": jnp.zeros((DIM,))}
+
+
+def _cfg(method="coalition", rounds=4, lr=0.05, **sim_kw):
+    sim_kw.setdefault("fleet", "cellular-flaky")
+    sim_kw.setdefault("seed", 3)
+    return FederationConfig(
+        n_clients=N_CLIENTS, n_coalitions=2, rounds=rounds, method=method,
+        client=ClientConfig(epochs=1, batch_size=10, lr=lr),
+        sim=sim.SimConfig(**sim_kw))
+
+
+def _fed(lsq, cfg):
+    loss_fn, eval_fn, _, _ = lsq
+    return Federation(loss_fn, eval_fn, cfg)
+
+
+def _run(lsq, cfg, engine, **kw):
+    _, _, cd, params = lsq
+    return _fed(lsq, cfg).run(params, cd, jax.random.key(7),
+                              engine=engine, **kw)
+
+
+# --- satellite: the contextvar W-pass counter ---------------------------------------
+
+class TestInstrument:
+    def test_nested_counters_see_their_own_deltas(self):
+        """Regression for the module-global counter: an inner
+        count_w_passes() block must see only passes counted inside it,
+        while the outer block still sees the total."""
+        with instrument.count_w_passes() as outer:
+            instrument.count_w_pass()
+            with instrument.count_w_passes() as inner:
+                assert inner() == 0
+                instrument.count_w_pass(2)
+                assert inner() == 2
+            assert outer() == 3
+        # a fresh block after both closed starts from zero again
+        with instrument.count_w_passes() as fresh:
+            assert fresh() == 0
+
+    def test_thread_isolation(self):
+        """Counts in another thread never leak into this one's counter."""
+        done = threading.Event()
+        with instrument.count_w_passes() as passes:
+            t = threading.Thread(
+                target=lambda: (instrument.count_w_pass(5), done.set()))
+            t.start()
+            t.join()
+            assert done.is_set()
+            assert passes() == 0
+
+
+# --- the dynamics metrics, unit-level -----------------------------------------------
+
+class TestMetrics:
+    def test_membership_churn(self):
+        a = jnp.array([0, 1, 1, 0], jnp.int32)
+        assert float(obs.membership_churn(a, a)) == 0.0
+        assert float(obs.membership_churn(a, 1 - a)) == 1.0
+        assert float(obs.membership_churn(
+            a, jnp.array([0, 1, 0, 1], jnp.int32))) == pytest.approx(0.5)
+
+    def test_size_entropy(self):
+        assert float(obs.size_entropy(jnp.array([6.0, 0.0]))) == 0.0
+        assert float(obs.size_entropy(jnp.array([3.0, 3.0]))) == \
+            pytest.approx(np.log(2), abs=1e-6)
+        # unnormalised masses are fine; empty total degrades to 0
+        assert float(obs.size_entropy(jnp.array([0.0, 0.0]))) == 0.0
+
+    def test_intra_radius(self):
+        # coalition 0 holds clients {0, 1} at d2 {1, 4}; coalition 1 is empty
+        med_d2 = jnp.array([[1.0, 9.0], [4.0, 9.0]])
+        a = jnp.array([0, 0], jnp.int32)
+        r = np.asarray(obs.intra_radius(med_d2, a, 2))
+        assert r.shape == (2,)
+        assert r[0] == pytest.approx(np.sqrt(2.5), rel=1e-6)
+        assert r[1] == 0.0                      # empty coalition -> 0
+        # zero-weight member contributes nothing
+        cw = jnp.array([1.0, 0.0])
+        r = np.asarray(obs.intra_radius(med_d2, a, 2, client_weights=cw))
+        assert r[0] == pytest.approx(1.0, rel=1e-6)
+
+    def test_barycenter_drift(self):
+        b0 = jnp.array([[0.0, 0.0], [1.0, 1.0]])
+        b1 = jnp.array([[3.0, 4.0], [1.0, 1.0]])
+        d = np.asarray(obs.barycenter_drift(b1, b0))
+        np.testing.assert_allclose(d, [5.0, 0.0], rtol=1e-6)
+
+
+# --- sinks ---------------------------------------------------------------------------
+
+class TestSinks:
+    def test_registry(self):
+        for name in ("jsonl", "stdout", "in_memory"):
+            assert name in obs.available_sinks()
+        with pytest.raises(KeyError, match="unknown sink"):
+            obs.make_sink("no-such-sink")
+
+        @obs.register_sink("_test_sink")
+        def _make(**_):
+            return obs.InMemorySink()
+
+        try:
+            assert isinstance(obs.make_sink("_test_sink"), obs.InMemorySink)
+        finally:
+            del obs.ledger._SINKS["_test_sink"]
+
+    def test_jsonl_roundtrip_and_close(self, tmp_path):
+        path = str(tmp_path / "run.jsonl")
+        sink = obs.make_sink("jsonl", path=path)
+        sink.emit({"kind": "round", "round": 0,
+                   "radius": jnp.array([1.0, float("nan")])})
+        sink.close()
+        sink.close()                            # idempotent
+        [rec] = [json.loads(ln) for ln in open(path)]
+        assert rec["round"] == 0
+        assert rec["radius"] == [1.0, None]     # array -> list, NaN -> null
+        with pytest.raises(RuntimeError, match="closed"):
+            sink.emit({"kind": "round"})
+
+    def test_tee(self):
+        a, b = obs.InMemorySink(), obs.InMemorySink()
+        assert obs.tee([]) is None
+        assert obs.tee([a]) is a
+        t = obs.tee([a, b])
+        t.emit({"kind": "round", "round": 1})
+        assert a.records == b.records == [{"kind": "round", "round": 1}]
+
+
+# --- dynamics in the Trace, fused and composed --------------------------------------
+
+class TestTraceDynamics:
+    def test_trace_carries_dynamics_fields(self, lsq):
+        _, hist = _run(lsq, _cfg(rounds=4), "scan")
+        t = hist.trace
+        assert np.shape(t.churn) == (4,)
+        assert np.shape(t.entropy) == (4,)
+        assert np.shape(t.radius) == (4, 2)
+        assert np.shape(t.drift) == (4, 2)
+        # round 0 compares against itself by definition
+        assert float(np.asarray(t.churn)[0]) == 0.0
+        np.testing.assert_array_equal(np.asarray(t.drift)[0], 0.0)
+        # History list views line up
+        assert len(hist.churn) == len(hist.entropy) == 4
+        assert len(hist.radius[0]) == len(hist.drift[0]) == 2
+
+    def test_churn_zero_in_identity_regime(self, lsq):
+        """A single-group strategy can never reassign anyone."""
+        _, hist = _run(lsq, _cfg(method="fedavg"), "scan")
+        np.testing.assert_array_equal(np.asarray(hist.trace.churn), 0.0)
+        np.testing.assert_array_equal(np.asarray(hist.trace.entropy), 0.0)
+
+    def test_drift_zero_under_frozen_lr(self, lsq):
+        """lr=0 freezes every client at θ0, so the coalition barycenters
+        never move: drift must be exactly zero at every round."""
+        _, hist = _run(lsq, _cfg(lr=0.0, rounds=4), "scan")
+        np.testing.assert_array_equal(np.asarray(hist.trace.drift), 0.0)
+
+    def test_fused_and_composed_radius_agree(self, lsq):
+        """Both Algorithm-1 paths report the radius, from their shared
+        (N, K) distance matrix, without extra W sweeps (fused stays at
+        the two-pass contract; composed stays at three)."""
+        w = jax.random.normal(jax.random.key(2), (10, 257))
+        state = coalitions.init_centers(jax.random.key(5), w, 3)
+        with instrument.count_w_passes() as passes:
+            jax.make_jaxpr(lambda w_, s: coalitions.run_round(
+                w_, s, fused=True).radius)(w, state)
+            assert passes() == 2
+        with instrument.count_w_passes() as passes:
+            jax.make_jaxpr(lambda w_, s: coalitions.run_round(
+                w_, s, fused=False).radius)(w, state)
+            assert passes() == 3
+        rf = coalitions.run_round(w, state, fused=True)
+        rc = coalitions.run_round(w, state, fused=False)
+        assert rf.radius.shape == rc.radius.shape == (3,)
+        np.testing.assert_allclose(np.asarray(rf.radius),
+                                   np.asarray(rc.radius), rtol=1e-5)
+
+    def test_composed_strategy_records_dynamics_end_to_end(self, lsq):
+        loss_fn, eval_fn, cd, params = lsq
+        strat = strategies.make_strategy(
+            "coalition", n_clients=N_CLIENTS, n_coalitions=2, fused=False)
+        fed = Federation(loss_fn, eval_fn, _cfg(rounds=3), strategy=strat)
+        _, hist = fed.run(params, cd, jax.random.key(7), engine="scan")
+        assert np.shape(hist.trace.radius) == (3, 2)
+        assert np.isfinite(np.asarray(hist.trace.radius)).all()
+
+
+# --- the ledger, streaming from a live run ------------------------------------------
+
+class TestRunLedger:
+    @pytest.mark.parametrize("engine", ENGINES)
+    @pytest.mark.parametrize("method", sorted(strategies._STRATEGIES))
+    def test_sink_leaves_run_bit_identical(self, lsq, engine, method):
+        """Acceptance: telemetry-on is bit-for-bit telemetry-off — final θ
+        and the complete History — on every engine x strategy cell."""
+        _, _, cd, params = lsq
+        fed = _fed(lsq, _cfg(method=method))
+        key = jax.random.key(7)
+        gp0, h0 = fed.run(params, cd, key, engine=engine)
+        mem = obs.InMemorySink()
+        gp1, h1 = fed.run(params, cd, key, engine=engine, sink=mem)
+        for a, b in zip(jax.tree.leaves(gp0), jax.tree.leaves(gp1)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for f0, f1 in zip(h0.trace, h1.trace):
+            if f0 is not None:
+                np.testing.assert_array_equal(np.asarray(f0),
+                                              np.asarray(f1))
+        # and the ledger itself is well-formed: run_meta first, then one
+        # round record per trace row, dynamics block present throughout
+        assert mem.records[0]["kind"] == obs.RUN_META
+        assert mem.records[0]["schema"] == obs.OBS_SCHEMA
+        rounds = [r for r in mem.records if r["kind"] == obs.ROUND]
+        assert len(rounds) == len(h1.churn)
+        assert [r["round"] for r in rounds] == list(range(len(rounds)))
+        for k in ("churn", "entropy", "radius", "drift", "loss", "acc"):
+            assert k in rounds[-1], k
+
+    def test_run_meta_on_substrate_engine(self, lsq):
+        mem = obs.InMemorySink()
+        _run(lsq, _cfg(), "event_driven", sink=mem)
+        meta = mem.records[0]
+        assert meta["engine"] == "event_driven"
+        assert meta["fleet"] == "cellular-flaky"
+        assert len(meta["device_time_s"]) == N_CLIENTS
+        assert meta["model_bytes"] > 0
+        assert all("sim_time" in r for r in mem.records[1:])
+
+    def test_metrics_every_cadence(self, lsq):
+        """k-th rounds plus round 0 plus the final round, nothing else."""
+        mem = obs.InMemorySink()
+        _run(lsq, _cfg(rounds=6), "scan", metrics_every=2, sink=mem)
+        rounds = [r["round"] for r in mem.records if r["kind"] == obs.ROUND]
+        assert rounds == [0, 2, 4, 5]
+
+    def test_run_validation(self, lsq):
+        _, _, cd, params = lsq
+        fed = _fed(lsq, _cfg(rounds=2))
+        with pytest.raises(ValueError, match="requires a sink"):
+            fed.run(params, cd, jax.random.key(7), metrics_every=1)
+        with pytest.raises(ValueError, match="must be >= 1"):
+            fed.run(params, cd, jax.random.key(7), metrics_every=0,
+                    sink=obs.InMemorySink())
+
+
+# --- serve-side counters ------------------------------------------------------------
+
+class TestServeCounters:
+    def test_counters_never_retrace(self):
+        from repro.serve import BatchServer, Snapshot
+
+        gp = {"w": jax.random.normal(jax.random.key(1), (8, 4)) * 0.1}
+        d = pytree.flatten(gp).shape[0]
+        bary = jax.random.normal(jax.random.key(2), (2, d))
+        snap = Snapshot(round=0, global_params=gp, barycenters=bary,
+                        assignment=np.arange(4) % 2, counts=None, meta={})
+        server = BatchServer(lambda p, x: x @ p["w"], snap)
+        ids = np.array([0, 1, -1, 3])
+        x = jax.random.normal(jax.random.key(3), (4, 8))
+        for _ in range(3):
+            server.serve(ids, x)
+            _ = server.stats                    # reading stats mid-serving
+        s = server.stats
+        assert server.compile_count == 1        # counters never retraced it
+        assert s["compiles"] == 1
+        assert s["batches"] == 3
+        assert s["queries"] == 12
+        assert s["fallback_queries"] == 3       # one stranger per batch
+        assert s["polls"] == s["swaps"] == 0
+
+
+# --- the Perfetto timeline ----------------------------------------------------------
+
+def _ledger_for(lsq, engine, rounds=4):
+    mem = obs.InMemorySink()
+    _run(lsq, _cfg(rounds=rounds), engine, sink=mem)
+    return mem.records
+
+
+class TestTimeline:
+    def test_event_driven_trace_builds_and_validates(self, lsq):
+        records = _ledger_for(lsq, "event_driven")
+        trace = timeline.build_trace(records)
+        assert timeline.validate_trace(trace) == []
+        ev = trace["traceEvents"]
+        pids = {e["pid"] for e in ev if e["ph"] in ("B", "E")}
+        assert timeline.PID_DEVICES in pids
+        assert timeline.PID_COALITIONS in pids
+        counters = {e["name"] for e in ev if e["ph"] == "C"}
+        assert {"churn", "entropy"} <= counters
+        assert trace["otherData"]["engine"] == "event_driven"
+
+    def test_semi_async_trace_validates(self, lsq):
+        trace = timeline.build_trace(_ledger_for(lsq, "semi_async"))
+        assert timeline.validate_trace(trace) == []
+
+    def test_rounds_only_engine_is_rejected(self, lsq):
+        with pytest.raises(ValueError, match="sim_time"):
+            timeline.build_trace(_ledger_for(lsq, "scan"))
+
+    def test_validator_catches_corruption(self):
+        bad = {"traceEvents": [
+            {"ph": "E", "ts": 0.0, "pid": 0, "tid": 0, "name": "x"},
+            {"ph": "B", "ts": 1.0, "pid": 0, "tid": 0, "name": "x"},
+        ]}
+        assert timeline.validate_trace(bad)     # E before B, unclosed B
+        unsorted = {"traceEvents": [
+            {"ph": "C", "ts": 5.0, "pid": 2, "tid": 0, "name": "c",
+             "args": {}},
+            {"ph": "C", "ts": 1.0, "pid": 2, "tid": 0, "name": "c",
+             "args": {}},
+        ]}
+        assert any("sorted" in p or "non-decreasing" in p
+                   for p in timeline.validate_trace(unsorted))
+
+    def test_write_trace_from_jsonl_ledger(self, lsq, tmp_path):
+        records = _ledger_for(lsq, "event_driven")
+        ledger_path = str(tmp_path / "run.jsonl")
+        with obs.make_sink("jsonl", path=ledger_path) as sink:
+            for rec in records:
+                sink.emit(rec)
+        out = str(tmp_path / "trace.json")
+        trace = timeline.write_trace(out, timeline.read_ledger(ledger_path))
+        on_disk = json.load(open(out))
+        assert on_disk["traceEvents"] == trace["traceEvents"]
+        assert timeline.validate_trace(on_disk) == []

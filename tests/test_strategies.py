@@ -184,7 +184,11 @@ def test_run_federation_all_strategies(tiny_fl):
 def test_history_compat_view():
     trace = Trace(loss=jnp.array([1.0, 0.5]), acc=jnp.array([0.1, 0.6]),
                   assignment=jnp.array([[0, 1, 1], [1, 0, 1]], jnp.int32),
-                  counts=jnp.array([[1.0, 2.0], [1.0, 2.0]]))
+                  counts=jnp.array([[1.0, 2.0], [1.0, 2.0]]),
+                  churn=jnp.array([0.0, 0.5]),
+                  entropy=jnp.array([0.6, 0.6]),
+                  radius=jnp.array([[0.1, 0.2], [0.1, 0.2]]),
+                  drift=jnp.array([[0.0, 0.0], [0.3, 0.4]]))
     h = History(trace=trace)
     assert h.rounds == [0, 1]
     assert h.train_loss == [1.0, 0.5]
@@ -192,6 +196,11 @@ def test_history_compat_view():
     assert h.assignments == [[0, 1, 1], [1, 0, 1]]
     assert h.counts == [[1, 2], [1, 2]]
     assert all(isinstance(v, int) for row in h.assignments for v in row)
+    # the coalition-dynamics block gets the same list view
+    assert h.churn == pytest.approx([0.0, 0.5])
+    assert h.entropy == pytest.approx([0.6, 0.6])
+    assert h.radius[1] == pytest.approx([0.1, 0.2])
+    assert h.drift[1] == pytest.approx([0.3, 0.4])
 
 
 def test_unknown_engine_error(tiny_fl):
