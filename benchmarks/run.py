@@ -53,6 +53,7 @@ def _coalition_round_stats(d: int, reps: int) -> dict:
     exactly twice.
     """
     from repro.core import coalitions, instrument
+    from repro.core import fused as fused_mod
 
     w = jax.random.normal(jax.random.key(0), (10, d), jnp.float32)
     state = coalitions.init_centers(jax.random.key(1), w, 3)
@@ -72,6 +73,7 @@ def _coalition_round_stats(d: int, reps: int) -> dict:
                 w_, s, fused=(name == "fused")).theta)(w, state)
         passes[name] = p()
     return {"n": 10, "d": d, "k": 3,
+            "chunk": fused_mod.resolve_chunk(None, d),
             "composed_us": us_c, "fused_us": us_f,
             "composed_compile_us": compile_us_c,
             "fused_compile_us": compile_us_f,
@@ -202,6 +204,105 @@ def _tiny_federation(rounds: int, method: str, sim_cfg=None):
     fed = Federation(loss_fn, lambda p: -jnp.mean((xe @ p["w"] - ye) ** 2),
                      cfg)
     return fed, {"w": jnp.zeros((dim,))}, cd
+
+
+def bench_federation_scale() -> tuple[float, float]:
+    """Fleet-size decoupling: cohort-mode federation at a fixed cohort width
+    C=16 while the fleet grows N ∈ {64, 1024, 65536, 1048576}.
+
+    The model is a two-layer regression sized to paper scale (D ≈ 8.5M,
+    ~34 MB fp32 per client) so the O(C·D) cohort buffers dominate anything
+    O(N): the hierarchical availability-weighted sampler
+    (repro.sim.cohort) plus the gather/scatter cohort view keep the jitted
+    round loop blind to N, so both us/round and live bytes must stay flat
+    (±20%, gated in CI) from N=64 to N=2^20.  Two reference rows ride
+    along at the largest dense-feasible width (n_clients=64, no cohort):
+    the plain dense round and the same run on a ``data``-sharded mesh
+    (every local device; psum-identity on 1 device), gated sharded ≤
+    dense wall-clock with a 15% scheduler-noise allowance.
+
+    Live bytes are sampled host-side at every round-record emit
+    (``jax.live_arrays()`` — the engine carry, fleet tables, and cohort
+    schedule are alive there; the W transient is not).  Returns (us per
+    cohort round at N=2^20, step-time ratio N=2^20 / N=64).
+    """
+    import gc
+
+    from repro import sim
+    from repro.core.client import ClientConfig
+    from repro.core.server import Federation, FederationConfig
+    from repro.obs.ledger import Sink
+
+    C, K, rounds, in_dim, h = 16, 3, 3, 64, 131_072
+    n_dense = 64                      # largest dense-feasible fleet at this D
+    kx, ky, k1, k2 = jax.random.split(jax.random.key(0), 4)
+    cd = {"x": jax.random.normal(kx, (n_dense, 4, in_dim)),
+          "y": jax.random.normal(ky, (n_dense, 4))}
+    init = {"w1": 0.1 * jax.random.normal(k1, (in_dim, h)),
+            "w2": 0.1 * jax.random.normal(k2, (h,))}
+    d_model = in_dim * h + h
+
+    def loss_fn(params, batch):
+        pred = jnp.tanh(batch["x"] @ params["w1"]) @ params["w2"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    xe = cd["x"][0]
+    ye = cd["y"][0]
+
+    def eval_fn(params):
+        return -loss_fn(params, {"x": xe, "y": ye})
+
+    class _LiveBytes(Sink):
+        def __init__(self):
+            self.peak = 0
+
+        def emit(self, record):
+            if record.get("kind") == "round":
+                self.peak = max(self.peak, sum(
+                    a.nbytes for a in jax.live_arrays()))
+
+    def measure(n_clients, fleet_size, mesh):
+        cfg = FederationConfig(
+            n_clients=n_clients, n_coalitions=K, rounds=rounds,
+            method="coalition",
+            client=ClientConfig(epochs=1, batch_size=4, lr=0.05),
+            fleet_size=fleet_size, mesh=mesh,
+            sim=sim.SimConfig(fleet="lognormal-edge"))
+        fed = Federation(loss_fn, eval_fn, cfg)
+        key = jax.random.key(1)
+        t0 = time.perf_counter()
+        fed.run(init, cd, key)                           # compile + schedule
+        compile_us = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        fed.run(init, cd, key)
+        best = time.perf_counter() - t0
+        mem = _LiveBytes()                 # doubles as the second timing rep
+        t0 = time.perf_counter()
+        fed.run(init, cd, key, sink=mem)
+        best = min(best, time.perf_counter() - t0)
+        del fed
+        gc.collect()
+        return {"us_per_round": best / rounds * 1e6,
+                "compile_us": compile_us, "live_bytes": mem.peak}
+
+    out = {"cohort_size": C, "d": d_model, "rounds": rounds, "sweep": {}}
+    for n in (64, 1024, 65_536, 1_048_576):
+        row = measure(C, n, None)
+        out["sweep"][str(n)] = row
+        print(f"# scale[N={n}] us/round={row['us_per_round']:.0f} "
+              f"live_MB={row['live_bytes'] / 1e6:.0f}", flush=True)
+    out["dense"] = {"n": n_dense, **measure(n_dense, None, None)}
+    mesh_spec = f"data={len(jax.devices())}"
+    out["sharded"] = {"n": n_dense, "mesh": mesh_spec,
+                      **measure(n_dense, None, mesh_spec)}
+    for kind in ("dense", "sharded"):
+        row = out[kind]
+        print(f"# scale[{kind} n={n_dense}] "
+              f"us/round={row['us_per_round']:.0f} "
+              f"live_MB={row.get('live_bytes', 0) / 1e6:.0f}", flush=True)
+    _JSON["federation_scale"] = out
+    us_1m = out["sweep"]["1048576"]["us_per_round"]
+    return us_1m, us_1m / out["sweep"]["64"]["us_per_round"]
 
 
 def bench_coalition_vs_fedavg_under_stragglers() -> tuple[float, float]:
@@ -495,6 +596,7 @@ def main() -> None:
         ("kernel_segment_sum", bench_segment_sum),
         ("kernel_flash_attention", bench_flash_attention),
         ("federation_scan_vs_python", bench_federation_engines),
+        ("federation_scale", bench_federation_scale),
         ("coalition_vs_fedavg_under_stragglers",
          bench_coalition_vs_fedavg_under_stragglers),
         ("coalition_vs_fedavg_energy_constrained",

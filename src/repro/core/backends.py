@@ -24,6 +24,12 @@ GPU Triton port) is one ``register_backend`` call, not a cross-module edit.
 ``distance.py`` registers the ``'xla'``/``'dot'`` reference implementations at
 import time; the ``'pallas'`` backend lazily imports the kernel wrappers so a
 missing TPU toolchain never breaks CPU-only use.
+
+Backends compose: :func:`repro.core.sharded.sharded_backend` wraps any of the
+three registered backends into an *unregistered* derived Backend (name
+``"xla@data8"`` etc.) whose ``fused_round`` is ``shard_map``-ped over a device
+mesh — resolution by instance (see :func:`get_backend`) is what makes that a
+drop-in at strategy-construction time without touching this registry.
 """
 from __future__ import annotations
 

@@ -86,7 +86,8 @@ def init_centers(key: jax.Array, w: jax.Array, k: int) -> CoalitionState:
 
 
 def assign(w: jax.Array, center_idx: jax.Array, *,
-           backend: str | bk.Backend = "xla") -> jax.Array:
+           backend: str | bk.Backend = "xla",
+           chunk: int | None = None) -> jax.Array:
     """Step II: each client joins the coalition with the nearest center.
 
     Center clients are pinned to their own coalition (the paper iterates over
@@ -94,14 +95,16 @@ def assign(w: jax.Array, center_idx: jax.Array, *,
     pin only matters for exact ties between duplicate weights).
     """
     centers = w[center_idx]                               # (K, D)
-    d2 = distance.sq_dists_to_points(w, centers, backend=backend)  # (N, K)
+    d2 = distance.sq_dists_to_points(w, centers, backend=backend,
+                                     chunk=chunk)         # (N, K)
     return fz.pin_assignment(d2, center_idx)
 
 
 def run_round(w: jax.Array, state: CoalitionState, *,
               backend: str | bk.Backend = "xla",
               client_weights: jax.Array | None = None,
-              fused: bool = True) -> CoalitionRound:
+              fused: bool = True,
+              chunk: int | None = None) -> CoalitionRound:
     """One full Algorithm-1 server round over fresh client weights ``w``.
 
     ``client_weights``: optional (N,) importances for the §III.B weighted-
@@ -114,19 +117,23 @@ def run_round(w: jax.Array, state: CoalitionState, *,
     five W-sized touches; ``fused=False`` keeps the composed reference
     (assign → barycenters → medoids → aggregate as separate primitive calls,
     bit-for-bit equal on the xla backend — tested in tests/test_fused_round.py).
+
+    ``chunk``: D-sweep tile size for the streaming passes (None = the
+    size-derived default, :func:`repro.core.fused.default_chunk`); both paths
+    resolve it identically so fused == composed stays bitwise.
     """
     backend = bk.get_backend(backend)      # resolve once for the whole round
     k = state.center_idx.shape[0]
     if fused:
         r = fz.fused_round(w, state.center_idx, backend=backend,
-                           client_weights=client_weights)
+                           client_weights=client_weights, chunk=chunk)
         return CoalitionRound(
             assignment=r.assignment, barycenters=r.barycenters,
             counts=r.counts, new_center_idx=r.new_center_idx, theta=r.theta,
             radius=r.radius,
             state=CoalitionState(center_idx=r.new_center_idx,
                                  round=state.round + 1))
-    assignment = assign(w, state.center_idx, backend=backend)
+    assignment = assign(w, state.center_idx, backend=backend, chunk=chunk)
     prev_centers = w[state.center_idx].astype(jnp.float32)
     b, counts = bary_mod.barycenters(w, assignment, k, fallback=prev_centers,
                                      backend=backend,
@@ -134,7 +141,7 @@ def run_round(w: jax.Array, state: CoalitionState, *,
     # The medoid election and the intra radius share one client->barycenter
     # distance matrix (what bary_mod.medoids computes internally), so the
     # radius adds no W sweep to the composed path either.
-    med_d2 = distance.sq_dists_to_points(w, b, backend=backend)
+    med_d2 = distance.sq_dists_to_points(w, b, backend=backend, chunk=chunk)
     new_centers = fz.medoid_from_d2(med_d2, assignment, client_weights)
     radius = obs_metrics.intra_radius(med_d2, assignment, k, client_weights)
     theta = bary_mod.global_aggregate(b)

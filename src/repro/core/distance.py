@@ -99,10 +99,10 @@ def _segment_sum_matmul(onehot: jax.Array, w: jax.Array) -> jax.Array:
 
 bk.register_backend(bk.Backend(
     name="xla",
-    pairwise_sq_dists=lambda w, chunk=65536, **kw: _pairwise_sq_xla(
-        w.astype(jnp.float32), chunk),
-    sq_dists_to_points=lambda w, p, chunk=65536, **kw: _to_points_sq_xla(
-        w, p, chunk),
+    pairwise_sq_dists=lambda w, chunk=None, **kw: _pairwise_sq_xla(
+        w.astype(jnp.float32), fz.resolve_chunk(chunk, w.shape[1])),
+    sq_dists_to_points=lambda w, p, chunk=None, **kw: _to_points_sq_xla(
+        w, p, fz.resolve_chunk(chunk, w.shape[1])),
     segment_sum=lambda onehot, w, **kw: _segment_sum_matmul(onehot, w),
     fused_round=fz.fused_round_xla,
 ))
@@ -116,13 +116,15 @@ bk.register_backend(bk.Backend(
 ))
 
 
-def pairwise_sq_dists(w: jax.Array, *, chunk: int = 65536,
+def pairwise_sq_dists(w: jax.Array, *, chunk: int | None = None,
                       backend: str | bk.Backend = "xla") -> jax.Array:
     """Squared pairwise Euclidean distances of client weight vectors.
 
     Args:
       w: (N, D) client weight matrix (rows are flattened models).
-      chunk: D-chunk size hint for streaming accumulation (xla backend).
+      chunk: D-chunk size hint for streaming accumulation (xla backend);
+        ``None`` resolves the size-derived default
+        (:func:`repro.core.fused.default_chunk`).
       backend: registry name ('xla' | 'dot' | 'pallas') or a Backend.
 
     Returns:
@@ -136,7 +138,8 @@ def pairwise_dists(w: jax.Array, **kw) -> jax.Array:
     return jnp.sqrt(jnp.maximum(pairwise_sq_dists(w, **kw), 0.0))
 
 
-def sq_dists_to_points(w: jax.Array, points: jax.Array, *, chunk: int = 65536,
+def sq_dists_to_points(w: jax.Array, points: jax.Array, *,
+                       chunk: int | None = None,
                        backend: str | bk.Backend = "xla") -> jax.Array:
     """(N, K) squared distances from each client row to each point row.
 

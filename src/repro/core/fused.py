@@ -75,6 +75,35 @@ class FusedRound(NamedTuple):
     radius: jax.Array         # (K,) float32 RMS member->barycenter distance
 
 
+# --- sweep chunk size ------------------------------------------------------------
+
+#: cap on the streaming sweep tile: (N, 64k) f32 chunks keep the resident
+#: working set a few MB at federation-scale N while amortising slice overhead.
+DEFAULT_CHUNK = 65536
+
+
+def default_chunk(d: int) -> int:
+    """Size-derived sweep chunk for a D-wide weight matrix.
+
+    Models narrower than the cap stream as one exact tile (no padded tail,
+    no scan); wider ones use the :data:`DEFAULT_CHUNK` cap.  Padding columns
+    are zeros, so either choice is bit-for-bit identical — the knob only
+    moves compute/memory, never numerics (sums of nonnegative terms gain
+    trailing ``+0.0`` at most).
+    """
+    return max(1, min(int(d), DEFAULT_CHUNK))
+
+
+def resolve_chunk(chunk: int | None, d: int) -> int:
+    """``chunk`` if explicitly set (validated), else :func:`default_chunk`."""
+    if chunk is None:
+        return default_chunk(d)
+    chunk = int(chunk)
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    return chunk
+
+
 # --- shared glue (the O(N*K) algebra between the two passes) ---------------------
 
 def pin_assignment(d2_centers: jax.Array, center_idx: jax.Array) -> jax.Array:
@@ -209,9 +238,10 @@ def _xla_bary_med_theta(w: jax.Array, oh_eff: jax.Array, denom: jax.Array,
 
 def fused_round_xla(w: jax.Array, center_idx: jax.Array, *,
                     client_weights: jax.Array | None = None,
-                    chunk: int = 65536, **_) -> FusedStats:
+                    chunk: int | None = None, **_) -> FusedStats:
     """The exact streaming reference: two ``lax.scan`` sweeps over W."""
     k = center_idx.shape[0]
+    chunk = resolve_chunk(chunk, w.shape[1])
     instrument.count_w_pass()                                # pass 1
     d2c = _xla_center_d2(w, center_idx, chunk)
     assignment = pin_assignment(d2c, center_idx)

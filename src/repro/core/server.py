@@ -70,6 +70,24 @@ hooks of :meth:`Federation.run`:
   :mod:`repro.obs` sink while the run is live; pure host-side consumption
   of scan outputs that already exist, so numerics are untouched.
 
+Two orthogonal scale axes decouple the engines from fleet size and from a
+single device (see docs/architecture.md "Sharded federation"):
+
+* **Cohort mode** (``FederationConfig.fleet_size``) — the engines never see
+  the fleet.  A registered fleet of N devices (up to millions) exists only
+  as the O(N) ``DeviceFleet`` availability tables; every round trains an
+  availability-weighted cohort of C = ``n_clients`` devices drawn by the
+  hierarchical Gumbel top-k sampler (:mod:`repro.sim.cohort`), and the
+  scanned programs carry the (C, D) cohort matrix — memory and step time
+  are O(C·D), independent of N.  The schedule is sampled once, eagerly,
+  before the first chunk; the jitted step's only N-dependence is the (C,)
+  id row it scans over.  ``fleet_size=None`` is the dense pre-cohort
+  behaviour, bit-for-bit.
+* **Mesh mode** (``FederationConfig.mesh``) — the coalition fused round
+  ``shard_map``s over the ``data`` axis of a device mesh with D-sharded
+  weight tiles and O(C²) psum collectives (:mod:`repro.core.sharded`);
+  bit-for-bit equal to the dense round on a 1-device mesh.
+
 All engines follow the identical PRNG-split discipline (the substrate
 engines draw availability from a *forked* stream via ``fold_in``, leaving
 the client-update chain untouched), so on a fixed seed they produce the same
@@ -111,7 +129,7 @@ def bytes_per_param(w: jax.Array) -> int:
 
 
 class FederationConfig(NamedTuple):
-    n_clients: int = 10
+    n_clients: int = 10                # cohort width C (scan width per round)
     n_coalitions: int = 3
     rounds: int = 30
     method: str = "coalition"          # any registered strategy name
@@ -120,6 +138,17 @@ class FederationConfig(NamedTuple):
     engine: str = "scan"               # 'scan' | 'python' | 'semi_async'
     #                                    | 'event_driven'
     sim: sim_mod.SimConfig = sim_mod.SimConfig()   # IoT substrate knobs
+    #: registered fleet size N for cohort mode — every round samples an
+    #: availability-weighted cohort of ``n_clients`` devices out of N
+    #: (:mod:`repro.sim.cohort`), so memory and step time are O(C·D)
+    #: regardless of N.  None = dense mode: the fleet *is* the cohort,
+    #: bit-for-bit the pre-cohort behaviour.
+    fleet_size: int | None = None
+    #: device-mesh spec (:func:`repro.launch.mesh.parse_mesh` — ``"data=8"``
+    #: | ``"host"`` | ``"production"``) to shard the coalition fused round
+    #: over; None = single-device dense round.  Validated eagerly at
+    #: construction like engine/backend/fleet.
+    mesh: str | None = None
 
 
 class Trace(NamedTuple):
@@ -155,6 +184,8 @@ class Trace(NamedTuple):
     energy_spent: jax.Array | None = None      # (R, N) cumulative joules spent
     energy_exhausted: jax.Array | None = None  # (R, N) 1 = device retired
     #                                            (cannot afford another cycle)
+    # --- cohort mode only ----------------------------------------------------
+    cohort: jax.Array | None = None            # (R, C) sampled device ids
 
 
 @dataclasses.dataclass
@@ -254,6 +285,13 @@ class History:
         if self.trace.energy_exhausted is None:
             return None
         return np.asarray(self.trace.energy_exhausted).astype(int).tolist()
+
+    @property
+    def cohorts(self) -> list[list[int]] | None:
+        """Per-round sampled fleet device ids (cohort-mode runs only)."""
+        if self.trace.cohort is None:
+            return None
+        return np.asarray(self.trace.cohort).astype(int).tolist()
 
 
 # -- engine scan carries --------------------------------------------------------
@@ -388,6 +426,22 @@ class Federation:
             raise ValueError(
                 f"max_events={cfg.sim.max_events} must be >= 0 "
                 f"(None = rounds - 1)")
+        if cfg.fleet_size is not None:
+            if cfg.fleet_size < cfg.n_clients:
+                raise ValueError(
+                    f"fleet_size={cfg.fleet_size} must be >= n_clients="
+                    f"{cfg.n_clients} (the cohort is sampled from the fleet)")
+            if self._spec_of(cfg.engine) != "scan":
+                raise ValueError(
+                    f"cohort mode (fleet_size set) supports the 'scan' and "
+                    f"'python' engines; {cfg.engine!r} carries dense "
+                    "fleet-sized buffers (staleness/energy ledgers) that do "
+                    "not cohortize")
+            if cfg.sim.scenario != "independent" or cfg.sim.rho != 0.0:
+                raise ValueError(
+                    "cohort mode requires the 'independent' scenario with "
+                    "rho=0 — coupled scenarios partition data jointly with "
+                    "a dense fleet")
         self.loss_fn = loss_fn
         self.eval_fn = eval_fn
         self.cfg = cfg
@@ -395,15 +449,39 @@ class Federation:
             strategies.make_strategy(cfg.method, n_clients=cfg.n_clients,
                                      n_coalitions=cfg.n_coalitions,
                                      backend=cfg.backend)
-        #: memoized jitted chunk programs, keyed by (engine spec, length) —
-        #: a plain run compiles exactly one; a snapshot cadence adds at most
-        #: one more (the remainder chunk)
-        self._chunk_progs: dict[tuple[str, int], Callable] = {}
+        #: parsed jax.sharding.Mesh when cfg.mesh names one (eager — a bad
+        #: spec or a too-small device count fails here, not mid-run); the
+        #: coalition strategy's backend is rewrapped so its fused round
+        #: shard_maps over the mesh's data axis (repro.core.sharded).  Flat
+        #: rules keep their dense round — the mesh only shards W sweeps.
+        self.mesh = None
+        if cfg.mesh is not None:
+            from repro.launch import mesh as mesh_lib   # lazy: avoid cycle
+            self.mesh = mesh_lib.parse_mesh(cfg.mesh)
+            if getattr(self.strategy, "backend", None) is not None:
+                from repro.core import sharded
+                self.strategy = dataclasses.replace(
+                    self.strategy, backend=sharded.sharded_backend(
+                        self.strategy.backend, self.mesh))
+        #: memoized jitted chunk programs, keyed by (engine spec, length,
+        #: cohort?) — a plain run compiles exactly one; a snapshot cadence
+        #: adds at most one more (the remainder chunk)
+        self._chunk_progs: dict[tuple[str, int, bool], Callable] = {}
 
     # -- shared round pieces -----------------------------------------------------
 
-    def _local_phase(self, global_params, client_data, key):
-        """Broadcast + vmapped ClientUpdate -> ((N, D) weights, (N,) losses)."""
+    def _local_phase(self, global_params, client_data, key, ids=None):
+        """Broadcast + vmapped ClientUpdate -> ((C, D) weights, (C,) losses).
+
+        ``ids`` is the round's (C,) cohort of fleet device ids (cohort mode
+        only): the gather contract maps device ``i`` to data shard
+        ``i mod S`` where S is ``client_data``'s leading dim, so the data
+        pytree stays S-sized however large the registered fleet is.  Dense
+        mode (``ids=None``) compiles the identical pre-cohort program.
+        """
+        if ids is not None:
+            client_data = jax.tree.map(lambda a: a[ids % a.shape[0]],
+                                       client_data)
         ckeys = jax.random.split(key, self.cfg.n_clients)
         new_params, losses = jax.vmap(
             lambda d, k: client_update(self.loss_fn, global_params, d, k,
@@ -444,16 +522,17 @@ class Federation:
             "drift": obs_metrics.barycenter_drift(bary, prev_bary),
         }
 
-    def _round0(self, init_params, client_data, key):
+    def _round0(self, init_params, client_data, key, ids=None):
         """Round 0: ω^0 <- ClientUpdate(θ^(0)); strategy state init from ω^0.
 
         Always full-participation — the bootstrap census round every engine
-        shares (and which fills the substrate engines' buffers).  Returns
+        shares (and which fills the substrate engines' buffers).  In cohort
+        mode the census runs over cohort row 0 of the schedule.  Returns
         ``(key, gp, state, bary, w0, y0)`` where ``y0`` is the round-0 row
         of the core trace metrics.
         """
         key, k0, kc = jax.random.split(key, 3)
-        w0, losses0 = self._local_phase(init_params, client_data, k0)
+        w0, losses0 = self._local_phase(init_params, client_data, k0, ids)
         state = self.strategy.init_state(kc, w0)
         res = self.strategy.round(w0, state)
         gp = pytree.unflatten(res.theta, init_params)
@@ -466,6 +545,8 @@ class Federation:
               "entropy": obs_metrics.size_entropy(res.metrics.counts),
               "radius": self._radius_of(res.metrics),
               "drift": jnp.zeros((self.strategy.n_groups,), jnp.float32)}
+        if ids is not None:
+            y0["cohort"] = ids
         return key, gp, res.state, self._bary_of(res), w0, y0
 
     @functools.cached_property
@@ -474,23 +555,52 @@ class Federation:
 
     @functools.cached_property
     def _fleet(self) -> sim_mod.DeviceFleet:
-        """The simulated device table (sampled once; deterministic in seed)."""
-        return sim_mod.make_fleet(self.cfg.sim.fleet, self.cfg.n_clients,
+        """The simulated device table (sampled once; deterministic in seed).
+
+        Sized by ``fleet_size`` in cohort mode — the only O(N) state a
+        cohort run ever holds (five float32 columns), everything else in the
+        engine is O(C·D).
+        """
+        n = self.cfg.fleet_size or self.cfg.n_clients
+        return sim_mod.make_fleet(self.cfg.sim.fleet, n,
                                   seed=self.cfg.sim.seed)
+
+    def _cohort_schedule(self, key, total: int):
+        """The run's (total+1, C) cohort-id table, or None in dense mode.
+
+        Row 0 seats the census round; row r the r-th scanned round.  Drawn
+        eagerly, once, from the COHORT_STREAM fork of the run key — the
+        jitted round programs never see the N-wide fleet, which is what
+        keeps steady-state step time independent of N.  Deterministic in
+        the key, so a checkpoint resume recomputes the identical schedule
+        (nothing N-sized is ever serialized).
+        """
+        if self.cfg.fleet_size is None:
+            return None
+        weights = sim_mod.effective_p(self._fleet, self.cfg.sim.participation)
+        n_pos = int(jnp.sum(weights > 0))
+        if n_pos < self.cfg.n_clients:
+            raise ValueError(
+                f"fleet has only {n_pos} devices with positive effective "
+                f"availability; cannot seat a cohort of {self.cfg.n_clients}")
+        ckey = jax.random.fold_in(key, sim_mod.COHORT_STREAM)
+        return sim_mod.sample_cohorts(ckey, weights, total + 1,
+                                      self.cfg.n_clients)
 
     # -- engine prologues (round 0 -> initial chunk carry) -------------------------
     # Jitted census round (memoized `_round0_jit`, which owns the user's
     # ``init_params`` and never donates them) plus eager one-off substrate
     # initialisation.  The returned carry is donated into the first chunk.
 
-    def _prologue_scan(self, init_params, client_data, key):
+    def _prologue_scan(self, init_params, client_data, key, ids=None):
         key, gp, state, bary, _, y0 = self._round0_jit(
-            init_params, client_data, key)
+            init_params, client_data, key, ids)
         return _ScanCarry(key, gp, state, bary, y0["assignment"]), y0
 
-    def _prologue_semi_async(self, init_params, client_data, key):
+    def _prologue_semi_async(self, init_params, client_data, key, ids=None):
         # Fork the availability stream off the run key WITHOUT consuming
         # it, so the client-update key chain is identical to 'scan'.
+        assert ids is None    # cohort mode rejects this engine eagerly
         scfg = self.cfg.sim
         akey = jax.random.fold_in(key, sim_mod.AVAILABILITY_STREAM)
         key, gp, state, bary, w0, y0 = self._round0_jit(
@@ -510,7 +620,8 @@ class Federation:
         return _SemiAsyncCarry(key, gp, state, bary, y0["assignment"], w0,
                                tau0, astate), y0
 
-    def _prologue_event_driven(self, init_params, client_data, key):
+    def _prologue_event_driven(self, init_params, client_data, key, ids=None):
+        assert ids is None    # cohort mode rejects this engine eagerly
         scfg, n = self.cfg.sim, self.cfg.n_clients
         akey = jax.random.fold_in(key, sim_mod.AVAILABILITY_STREAM)
         key, gp, state, bary, w0, y0 = self._round0_jit(
@@ -552,9 +663,12 @@ class Federation:
     def _step_scan(self, data):
         strategy = self.strategy
 
-        def step(carry: _ScanCarry, _):
+        def step(carry: _ScanCarry, ids):
+            # ``ids`` is the scanned-over cohort row in cohort mode, None
+            # (no xs) on the dense path — where this step traces to exactly
+            # the pre-cohort program.
             key, kr = jax.random.split(carry.key)
-            w, losses = self._local_phase(carry.gp, data, kr)
+            w, losses = self._local_phase(carry.gp, data, kr, ids)
             res = strategy.round(w, carry.state)
             gp = pytree.unflatten(res.theta, carry.gp)
             acc = self.eval_fn(gp)
@@ -564,6 +678,8 @@ class Federation:
                  "counts": res.metrics.counts,
                  **self._dynamics_row(res, carry.prev_assign, carry.bary,
                                       bary)}
+            if ids is not None:
+                y["cohort"] = ids
             return _ScanCarry(key, gp, res.state, bary,
                               res.metrics.assignment), y
 
@@ -714,7 +830,7 @@ class Federation:
         """'python' shares the scan step/carry; it just chunks per round."""
         return "scan" if name == "python" else name
 
-    def _chunk_program(self, name: str, length: int):
+    def _chunk_program(self, name: str, length: int, cohort: bool = False):
         """Jitted ``(carry, data) -> (carry', ys)`` running ``length`` rounds.
 
         Donation contract: the carry — the θ pytree, strategy state, the
@@ -726,13 +842,20 @@ class Federation:
         inputs (``client_data``) are never donated.
         """
         spec = self._spec_of(name)
-        memo_key = (spec, length)
+        memo_key = (spec, length, cohort)
         if memo_key not in self._chunk_progs:
             step_builder = getattr(self, f"_step_{spec}")
 
-            def chunk(carry, data):
-                return jax.lax.scan(step_builder(data), carry, None,
-                                    length=length)
+            if cohort:
+                # the chunk scans over its (length, C) slice of the cohort
+                # schedule — the only per-round input besides the carry
+                def chunk(carry, data, ids):
+                    return jax.lax.scan(step_builder(data), carry, ids,
+                                        length=length)
+            else:
+                def chunk(carry, data):
+                    return jax.lax.scan(step_builder(data), carry, None,
+                                        length=length)
 
             self._chunk_progs[memo_key] = jax.jit(chunk, donate_argnums=(0,))
         return self._chunk_progs[memo_key]
@@ -769,6 +892,8 @@ class Federation:
                "n_clients": cfg.n_clients,
                "n_groups": self.strategy.n_groups,
                "steps": self._n_steps(name) + 1}
+        if cfg.fleet_size is not None:
+            rec["fleet_size"] = cfg.fleet_size
         if hasattr(carry, "buf"):
             model_bytes = carry.buf.shape[1] * bytes_per_param(carry.buf)
             rec.update(
@@ -846,8 +971,10 @@ class Federation:
                     ckpt_every=None, ckpt_dir=None, resume=False,
                     metrics_every=None, sink=None):
         total = self._n_steps(name)
+        cohorts = self._cohort_schedule(key, total)
         carry, y0 = getattr(self, f"_prologue_{self._spec_of(name)}")(
-            init_params, client_data, key)
+            init_params, client_data, key,
+            None if cohorts is None else cohorts[0])
         parts = [jax.tree.map(lambda a: jnp.asarray(a)[None], y0)]
         r_done = 0
         restored = (self._restore_ckpt(ckpt_dir, name, carry, y0)
@@ -877,8 +1004,13 @@ class Federation:
                 or self._fires(r, ckpt_every, total)
                 or self._fires(r, metrics_every, total))
         for r in boundaries:
-            carry, ys = self._chunk_program(name, r - r_done)(
-                carry, client_data)
+            prog = self._chunk_program(name, r - r_done,
+                                       cohort=cohorts is not None)
+            if cohorts is None:
+                carry, ys = prog(carry, client_data)
+            else:
+                carry, ys = prog(carry, client_data,
+                                 cohorts[r_done + 1:r + 1])
             parts.append(ys)
             if sink is not None:
                 self._emit_rows(sink, ys, r_done + 1, metrics_every, total)
@@ -937,6 +1069,10 @@ class Federation:
         if name not in self._ENGINES:
             raise ValueError(f"unknown engine {name!r}; registered engines: "
                              f"{tuple(sorted(self._ENGINES))}")
+        if self.cfg.fleet_size is not None and self._spec_of(name) != "scan":
+            raise ValueError(
+                f"cohort mode (fleet_size set) supports the 'scan' and "
+                f"'python' engines, not {name!r}")
         if snapshot_every is not None:
             if snapshot_every < 1:
                 raise ValueError(

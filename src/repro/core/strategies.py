@@ -244,6 +244,10 @@ class CoalitionStrategy(Strategy):
     #: primitive (two sweeps over the (N, D) matrix instead of five W-sized
     #: touches); False keeps the composed reference path for debugging.
     fused: bool = True
+    #: D-sweep chunk size for the streaming passes; None = the size-derived
+    #: default (:func:`repro.core.fused.default_chunk`).  Fused and composed
+    #: paths resolve the same value, preserving their bitwise equality.
+    chunk: int | None = None
 
     hierarchical: ClassVar[bool] = True
 
@@ -261,7 +265,8 @@ class CoalitionStrategy(Strategy):
         if mask is not None:
             cw = mask if cw is None else cw * mask
         return co.run_round(w, state, backend=self.backend,
-                            client_weights=cw, fused=self.fused)
+                            client_weights=cw, fused=self.fused,
+                            chunk=self.chunk)
 
     def round(self, w, state, mask=None):
         r = self._coalition_round(w, state, mask)
@@ -323,19 +328,21 @@ def _make_fedavg_trimmed(*, n_clients, n_coalitions=1, backend="xla",
 
 @register_strategy("coalition")
 def _make_coalition(*, n_clients, n_coalitions=3, backend="xla",
-                    client_weights=None, fused=True, **_) -> Strategy:
+                    client_weights=None, fused=True, chunk=None,
+                    **_) -> Strategy:
     return CoalitionStrategy(n_clients=n_clients, n_groups=n_coalitions,
                              backend=bk.get_backend(backend),
-                             client_weights=client_weights, fused=fused)
+                             client_weights=client_weights, fused=fused,
+                             chunk=chunk)
 
 
 @register_strategy("coalition_topk")
 def _make_coalition_topk(*, n_clients, n_coalitions=3, backend="xla",
                          client_weights=None, top_m=None, fused=True,
-                         **_) -> Strategy:
+                         chunk=None, **_) -> Strategy:
     if top_m is None:
         top_m = max(1, n_coalitions - 1)
     return TopKCoalitionStrategy(n_clients=n_clients, n_groups=n_coalitions,
                                  backend=bk.get_backend(backend),
                                  client_weights=client_weights, top_m=top_m,
-                                 fused=fused)
+                                 fused=fused, chunk=chunk)

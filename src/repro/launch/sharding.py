@@ -189,6 +189,24 @@ def cache_specs(mesh, cache_shape: PyTree) -> PyTree:
     return jax.tree_util.tree_map_with_path(f, cache_shape)
 
 
+def cohort_matrix_spec(axis: str = "data") -> P:
+    """The federation's (C, D) cohort weight matrix: D over ``axis``.
+
+    Clients (rows) stay replicated — C is small by construction (the cohort
+    sampler caps it) while D is the model — so the fused round's collectives
+    stay O(C²) and the barycenter/θ tiles inherit the same D-sharding
+    (see :mod:`repro.core.sharded`).
+    """
+    return P(None, axis)
+
+
+def fused_stats_specs(axis: str = "data"):
+    """PartitionSpecs of a sharded round's FusedStats (core.sharded rule)."""
+    from repro.core.sharded import stats_specs   # lazy: core is heavier
+
+    return stats_specs(axis)
+
+
 def with_named(mesh, specs: PyTree) -> PyTree:
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))

@@ -19,6 +19,11 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train --mode fl --method coalition \
       --rounds 10 --snapshot-dir /tmp/fl-store --snapshot-every 2 \
       --ckpt-dir /tmp/fl-ckpt --ckpt-every 5
+  PYTHONPATH=src python -m repro.launch.train --mode fl --method coalition \
+      --fleet-size 1048576 --clients 64 --fleet lognormal-edge --rounds 10
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.train --mode fl --method coalition \
+      --mesh data=8 --rounds 10
   PYTHONPATH=src python -m repro.launch.train --mode pretrain \
       --arch hymba-1.5b --reduced --steps 200
 """
@@ -56,6 +61,7 @@ _EXTRA_CONSUMERS = {
     "top_m": ("coalition_topk",),
     "trim": ("fedavg_trimmed",),
     "client_weights": ("fedavg_weighted", "coalition", "coalition_topk"),
+    "chunk": ("coalition", "coalition_topk"),
 }
 
 
@@ -69,6 +75,8 @@ def _strategy_extras(args) -> dict:
     if args.client_weights:
         extras["client_weights"] = jnp.asarray(
             [float(v) for v in args.client_weights.split(",")], jnp.float32)
+    if args.chunk is not None:
+        extras["chunk"] = args.chunk
     for name in extras:
         if args.method not in _EXTRA_CONSUMERS[name]:
             raise SystemExit(
@@ -83,6 +91,23 @@ def run_fl(args) -> dict:
     from repro.core.server import Federation, FederationConfig
     from repro.data import loader, synthetic
     from repro.models import cnn
+
+    # Fail fast on sharding/cohort flags, before any data touches memory:
+    # a bad mesh spec or an undersized fleet should not cost a dataset load.
+    if args.mesh is not None:
+        from repro.launch import mesh as mesh_lib
+        try:
+            mesh_lib.parse_mesh(args.mesh)
+        except ValueError as e:
+            raise SystemExit(f"--mesh: {e}") from None
+    if args.fleet_size is not None:
+        if args.fleet_size < args.clients:
+            raise SystemExit(f"--fleet-size {args.fleet_size} must be >= "
+                             f"--clients {args.clients} (the per-round "
+                             f"cohort is sampled from the fleet)")
+        if args.engine not in ("scan", "python"):
+            raise SystemExit("--fleet-size (cohort mode) requires --engine "
+                             "scan or python")
 
     data = synthetic.mnist_idx()
     source = "mnist-idx"
@@ -112,6 +137,7 @@ def run_fl(args) -> dict:
         client=ClientConfig(epochs=args.local_epochs,
                             batch_size=args.batch_size, lr=args.lr),
         backend=args.backend, engine=args.engine,
+        fleet_size=args.fleet_size, mesh=args.mesh,
         sim=sim.SimConfig(fleet=args.fleet, participation=args.participation,
                           staleness_alpha=args.staleness,
                           deadline=args.deadline,
@@ -172,6 +198,15 @@ def run_fl(args) -> dict:
            "final_entropy": round(hist.entropy[-1], 4),
            "mean_drift": round(float(np.mean(hist.drift)), 6),
            "wall_s": round(time.time() - t0, 1)}
+    if fed.mesh is not None:
+        from repro.launch import mesh as mesh_lib
+
+        out["mesh"] = mesh_lib.mesh_spec(fed.mesh)
+        out["backend_sharded"] = getattr(
+            getattr(fed.strategy, "backend", None), "name", None)
+    if args.fleet_size is not None:
+        out["fleet_size"] = args.fleet_size
+        out["cohort_size"] = args.clients
     if args.metrics_out:
         out["metrics_out"] = args.metrics_out
     if args.profile_dir:
@@ -277,6 +312,23 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--n-test", type=int, default=4000)
     ap.add_argument("--backend", default="xla",
                     choices=["xla", "dot", "pallas"])
+    # fl: sharded federation (repro.core.sharded + repro.sim.cohort)
+    ap.add_argument("--mesh", default=None,
+                    help="run the coalition fused round mesh-parallel: "
+                         "'host', 'production', or explicit 'axis=N' pairs "
+                         "with a 'data' axis (e.g. 'data=8'; on CPU export "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                         "first). Validated eagerly; echoed in the output "
+                         "JSON")
+    ap.add_argument("--fleet-size", type=int, default=None,
+                    help="total fleet size N for hierarchical cohort "
+                         "sampling: each round an availability-weighted "
+                         "cohort of --clients devices trains, so memory and "
+                         "step time stay O(cohort), independent of N "
+                         "(--engine scan or python)")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="D-sweep tile width of the fused round's streaming "
+                         "passes (coalition methods; default min(D, 65536))")
     ap.add_argument("--engine", default="scan",
                     choices=["scan", "python", "semi_async", "event_driven"],
                     help="fully-jitted lax.scan round loop, legacy host "

@@ -57,6 +57,7 @@ from repro.sim.availability import (AVAILABILITY_STREAM, AvailabilityState,
                                     sample_mask)
 from repro.sim.clock import (device_event_energy, device_round_time,
                              round_stats, staleness_weights)
+from repro.sim.cohort import COHORT_STREAM, sample_cohort, sample_cohorts
 from repro.sim.devices import (DeviceFleet, SimConfig, available_fleets,
                                make_fleet, register_fleet)
 from repro.sim.scenarios import (Scenario, available_scenarios,
@@ -66,6 +67,7 @@ from repro.sim.scenarios import (Scenario, available_scenarios,
 
 __all__ = [
     "AVAILABILITY_STREAM",
+    "COHORT_STREAM",
     "AvailabilityState",
     "DeviceFleet",
     "Scenario",
@@ -84,6 +86,8 @@ __all__ = [
     "register_fleet",
     "register_scenario",
     "round_stats",
+    "sample_cohort",
+    "sample_cohorts",
     "sample_mask",
     "staleness_weights",
 ]

@@ -1,0 +1,88 @@
+"""Hierarchical cohort sampling: C active devices out of a fleet of N.
+
+The massive-IoT regime (Savazzi et al., PAPERS.md) registers fleets of up
+to millions of devices, but only a cohort of C ≈ 10–1k devices trains per
+round.  This module picks that cohort, availability-weighted by the
+``DeviceFleet`` tables, as **Gumbel top-k** sampling: draw one Gumbel per
+device, add ``log`` availability, keep the C largest.  That is exactly
+weighted sampling *without replacement* (the Gumbel-max trick), and — the
+property everything here leans on — top-k is associative:
+
+    top_C(scores) == top_C( concat_g( top_min(C,|g|)(scores_g) ) )
+
+for any partition into cells g.  So sampling runs **hierarchically**: the
+fleet is tiled into cells of ``cell_size`` devices (think gateways /
+regional aggregators), each cell elects its ``min(C, cell_size)`` best
+candidates, and a single global top-C over the ~N·C/cell_size survivors
+picks the cohort.  The result is *bit-identical* to flat top-k over all N
+scores (asserted in tests/test_sharded.py) while the transient state is
+O(cells · C) instead of requiring a monolithic N-wide sort.
+
+Devices with zero effective availability get score ``-inf`` and are never
+sampled while at least C positive-weight devices exist (the engine checks
+that precondition eagerly).  Everything is a pure function of the PRNG
+key: same key ⇒ same cohort, which is what keeps checkpoint resume
+bit-for-bit — the schedule is recomputed, never stored.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+#: fold_in tag for the cohort-schedule PRNG stream, disjoint from the run
+#: key's split tree and from AVAILABILITY_STREAM (availability.py).
+COHORT_STREAM = 0xC040
+
+DEFAULT_CELL = 4096
+
+
+@partial(jax.jit, static_argnames=("cohort_size", "cell_size"))
+def sample_cohort(key, weights, cohort_size: int, *,
+                  cell_size: int = DEFAULT_CELL):
+    """One availability-weighted cohort: (C,) distinct int32 device ids.
+
+    ``weights`` is the (N,) effective-availability vector (``sim.effective_p``
+    of the fleet); entries ``<= 0`` are never sampled.  Ids come out in
+    descending perturbed-score order.  Hierarchical two-level top-k, exactly
+    equal to flat Gumbel top-k over all N devices (see module docstring).
+    """
+    n = weights.shape[0]
+    c = int(cohort_size)
+    if not 1 <= c <= n:
+        raise ValueError(f"cohort_size must be in [1, {n}], got {c}")
+    w = weights.astype(jnp.float32)
+    score = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-38)), -jnp.inf)
+    score = score + jax.random.gumbel(key, (n,), jnp.float32)
+
+    pad = (-n) % cell_size
+    if pad:
+        score = jnp.pad(score, (0, pad), constant_values=-jnp.inf)
+    cells = score.shape[0] // cell_size
+    per_cell = score.reshape(cells, cell_size)
+    # a cell can contribute at most min(C, cell_size) global winners, so the
+    # per-cell election loses nothing
+    m = min(c, cell_size)
+    elected, local_ids = jax.lax.top_k(per_cell, m)          # (cells, m)
+    base = jnp.arange(cells, dtype=jnp.int32)[:, None] * cell_size
+    candidate_ids = (local_ids.astype(jnp.int32) + base).reshape(-1)
+    _, winners = jax.lax.top_k(elected.reshape(-1), c)       # global top-C
+    return candidate_ids[winners]
+
+
+@partial(jax.jit, static_argnames=("steps", "cohort_size", "cell_size"))
+def sample_cohorts(key, weights, steps: int, cohort_size: int, *,
+                   cell_size: int = DEFAULT_CELL):
+    """The whole run's cohort schedule: (steps, C) int32.
+
+    Row ``r`` uses ``fold_in(key, r)`` — rows are independent draws (a device
+    may appear in many rounds), and any row can be recomputed in isolation.
+    Internally a ``lax.map`` so the N-wide score transients live one row at
+    a time, never (steps, N).
+    """
+    def row(r):
+        return sample_cohort(jax.random.fold_in(key, r), weights,
+                             cohort_size, cell_size=cell_size)
+
+    return jax.lax.map(row, jnp.arange(steps, dtype=jnp.uint32))

@@ -30,6 +30,12 @@ Built-ins:
   ``cellular-flaky``  — battery/cellular devices: thin, heavy-tailed
                         uplinks, low and *bursty* availability (high
                         persistence => outages span consecutive rounds).
+
+Fleets also back the cohort sampler (:mod:`repro.sim.cohort`): in cohort
+mode (``FederationConfig(fleet_size=N)``) a fleet of N devices is sampled
+here while only a C-wide cohort — drawn per round with probability
+proportional to ``effective_p`` availability — ever enters the jitted
+round loop, so these tables are the single O(N) object in the system.
 """
 from __future__ import annotations
 

@@ -283,12 +283,19 @@ class TestMaskedStrategies:
         from repro.launch.train import _strategy_extras
 
         ns = argparse.Namespace(method="fedavg", top_m=None, trim=2,
-                                client_weights=None)
+                                client_weights=None, chunk=None)
         with pytest.raises(SystemExit, match="--trim applies only to"):
             _strategy_extras(ns)
         ns = argparse.Namespace(method="fedavg_trimmed", top_m=None, trim=2,
-                                client_weights=None)
+                                client_weights=None, chunk=None)
         assert _strategy_extras(ns) == {"trim": 2}
+        ns = argparse.Namespace(method="fedavg", top_m=None, trim=None,
+                                client_weights=None, chunk=4096)
+        with pytest.raises(SystemExit, match="--chunk applies only to"):
+            _strategy_extras(ns)
+        ns = argparse.Namespace(method="coalition", top_m=None, trim=None,
+                                client_weights=None, chunk=4096)
+        assert _strategy_extras(ns) == {"chunk": 4096}
 
     def test_flat_metrics_report_mass(self):
         s = strategies.make_strategy("fedavg", n_clients=5, n_coalitions=2)
