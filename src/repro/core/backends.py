@@ -55,6 +55,11 @@ class Backend(NamedTuple):
     #: optional two-pass fused round (repro.core.fused.FusedStats); None =
     #: serve coalition rounds through the generic composition instead.
     fused_round: Callable[..., "FusedStats"] | None = None
+    #: optional sketched round ``(w, center_idx, *, sketcher, ...)`` — only
+    #: derived backends that must own the sketch themselves set this (the
+    #: sharded wrapper psums partial sketches along its mesh axis); None =
+    #: the dispatcher sketches densely and runs the shared sketched round.
+    sketched_fused_round: Callable[..., "FusedStats"] | None = None
 
 
 _BACKENDS: dict[str, Backend] = {}

@@ -43,30 +43,59 @@ def client_update(loss_fn: Callable[[PyTree, PyTree], jax.Array],
     """
     n = jax.tree.leaves(data)[0].shape[0]
     bs = cfg.batch_size
+    if n < 1:
+        raise ValueError("client shard is empty (n=0): nothing to train on")
     steps_per_epoch = n // bs
-    if steps_per_epoch < 1:
-        raise ValueError(
-            f"batch_size={bs} exceeds the client shard size n={n}: "
-            "no full minibatch can be formed (mean loss would be NaN)")
+    tail = n - steps_per_epoch * bs
     opt = opt_mod.sgd(cfg.lr, momentum=cfg.momentum)
     opt_state = opt.init(params)
-    grad_fn = jax.value_and_grad(loss_fn)
+    # allow_int: non-float leaves (position tables, buffers) ride through the
+    # local phase as float0 tangents the optimizer passes through untouched.
+    grad_fn = jax.value_and_grad(loss_fn, allow_int=True)
+
+    def sgd_step(carry, batch):
+        params, opt_state = carry
+        loss, grads = grad_fn(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = opt_mod.apply_updates(params, updates)
+        return (params, opt_state), loss
+
+    def tail_step(carry, idx):
+        # The ragged n mod bs tail as one masked batch: pad the leftover
+        # permutation indices up to bs, weight each row's loss by its mask,
+        # and average over the *real* rows only — padding contributes zero
+        # loss and zero gradient, so no sample is ever dropped or
+        # double-counted.
+        params, opt_state = carry
+        pad = jnp.zeros((bs - tail,), idx.dtype)
+        rows = jax.tree.map(lambda a: a[jnp.concatenate([idx, pad])], data)
+        mask = (jnp.arange(bs) < tail)
+
+        def masked_loss(p):
+            per_row = jax.vmap(
+                lambda row: loss_fn(p, jax.tree.map(lambda a: a[None], row))
+            )(rows)
+            return jnp.sum(per_row * mask.astype(per_row.dtype)) / tail
+
+        loss, grads = jax.value_and_grad(masked_loss, allow_int=True)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = opt_mod.apply_updates(params, updates)
+        return (params, opt_state), loss
 
     def epoch(carry, ekey):
-        params, opt_state = carry
-        perm = jax.random.permutation(ekey, n)[: steps_per_epoch * bs]
-        batches = jax.tree.map(
-            lambda a: a[perm].reshape((steps_per_epoch, bs) + a.shape[1:]), data)
-
-        def step(carry, batch):
-            params, opt_state = carry
-            loss, grads = grad_fn(params, batch)
-            updates, opt_state = opt.update(grads, opt_state, params)
-            params = opt_mod.apply_updates(params, updates)
-            return (params, opt_state), loss
-
-        (params, opt_state), losses = jax.lax.scan(step, (params, opt_state), batches)
-        return (params, opt_state), jnp.mean(losses)
+        perm = jax.random.permutation(ekey, n)
+        if steps_per_epoch:
+            batches = jax.tree.map(
+                lambda a: a[perm[: steps_per_epoch * bs]].reshape(
+                    (steps_per_epoch, bs) + a.shape[1:]), data)
+            carry, losses = jax.lax.scan(sgd_step, carry, batches)
+            if tail == 0:    # divisible shard: exactly the pre-tail program
+                return carry, jnp.mean(losses)
+            total = jnp.sum(losses)
+        else:
+            total = jnp.float32(0.0)
+        carry, tail_loss = tail_step(carry, perm[steps_per_epoch * bs:])
+        return carry, (total + tail_loss) / (steps_per_epoch + 1)
 
     ekeys = jax.random.split(key, cfg.epochs)
     (params, _), epoch_losses = jax.lax.scan(epoch, (params, opt_state), ekeys)

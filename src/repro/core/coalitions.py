@@ -104,7 +104,8 @@ def run_round(w: jax.Array, state: CoalitionState, *,
               backend: str | bk.Backend = "xla",
               client_weights: jax.Array | None = None,
               fused: bool = True,
-              chunk: int | None = None) -> CoalitionRound:
+              chunk: int | None = None,
+              sketcher=None) -> CoalitionRound:
     """One full Algorithm-1 server round over fresh client weights ``w``.
 
     ``client_weights``: optional (N,) importances for the §III.B weighted-
@@ -121,12 +122,21 @@ def run_round(w: jax.Array, state: CoalitionState, *,
     ``chunk``: D-sweep tile size for the streaming passes (None = the
     size-derived default, :func:`repro.core.fused.default_chunk`); both paths
     resolve it identically so fused == composed stays bitwise.
+
+    ``sketcher``: a non-identity :class:`repro.core.sketch.Sketcher` reroutes
+    assignment + medoid election to the (N, S) sketch (≤ 2 full W sweeps,
+    see :func:`repro.core.fused.sketched_fused_round`).  The fused/composed
+    distinction dissolves under a sketch — pass 1 no longer exists as a full
+    sweep — so a sketched round always takes the fused entry point.
     """
     backend = bk.get_backend(backend)      # resolve once for the whole round
     k = state.center_idx.shape[0]
+    if sketcher is not None and not sketcher.is_identity:
+        fused = True
     if fused:
         r = fz.fused_round(w, state.center_idx, backend=backend,
-                           client_weights=client_weights, chunk=chunk)
+                           client_weights=client_weights, chunk=chunk,
+                           sketcher=sketcher)
         return CoalitionRound(
             assignment=r.assignment, barycenters=r.barycenters,
             counts=r.counts, new_center_idx=r.new_center_idx, theta=r.theta,

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 
 from repro.core import backends as bk
 from repro.core import instrument
+from repro.core import sketch as sk_mod
 from repro.obs import metrics as obs_metrics
 
 
@@ -236,6 +237,43 @@ def _xla_bary_med_theta(w: jax.Array, oh_eff: jax.Array, denom: jax.Array,
     return b, theta, acc
 
 
+def _xla_bary_theta(w: jax.Array, oh_eff: jax.Array, denom: jax.Array,
+                    chunk: int) -> tuple[jax.Array, jax.Array]:
+    """Barycenter + θ tiles only — the sketched round's pass 2.
+
+    Same chunking/association as :func:`_xla_bary_med_theta` minus the medoid
+    accumulator (the sketched round elects medoids in sketch space, so the
+    (N, K) diff-square work would be dead compute).
+    """
+    n, d = w.shape
+    k = oh_eff.shape[0]
+    nfull, tail = divmod(d, chunk)
+
+    def emit(wk):
+        bc = (oh_eff @ wk) / denom[:, None]                  # (K, c)
+        return bc, jnp.mean(bc, axis=0)
+
+    b_parts, t_parts = [], []
+    if nfull:
+        def body(carry, i):
+            wk = jax.lax.dynamic_slice_in_dim(
+                w, i * chunk, chunk, 1).astype(jnp.float32)
+            return carry, emit(wk)
+
+        _, (bcs, tcs) = jax.lax.scan(body, None, jnp.arange(nfull))
+        b_parts.append(jnp.moveaxis(bcs, 0, 1).reshape(k, nfull * chunk))
+        t_parts.append(tcs.reshape(nfull * chunk))
+    if tail:
+        wk = jnp.pad(w[:, nfull * chunk:].astype(jnp.float32),
+                     ((0, 0), (0, chunk - tail)))
+        bc, tc = emit(wk)
+        b_parts.append(bc[:, :tail])
+        t_parts.append(tc[:tail])
+    b = b_parts[0] if len(b_parts) == 1 else jnp.concatenate(b_parts, axis=1)
+    theta = t_parts[0] if len(t_parts) == 1 else jnp.concatenate(t_parts)
+    return b, theta
+
+
 def fused_round_xla(w: jax.Array, center_idx: jax.Array, *,
                     client_weights: jax.Array | None = None,
                     chunk: int | None = None, **_) -> FusedStats:
@@ -334,11 +372,60 @@ def compose_fused_round(backend: bk.Backend, w: jax.Array,
                       med_d2=med_d2, theta=theta)
 
 
+# --- sketched round (assignment + medoids in sketch space) ------------------------
+
+def sketch_stage(backend: bk.Backend, s_w: jax.Array, center_idx: jax.Array, *,
+                 client_weights: jax.Array | None = None):
+    """Pass 1 + medoid geometry entirely on the (N, S) sketch.
+
+    Because the sketch map is linear, sketched barycenters are exact sketches
+    of the true barycenters: ``S(Σαᵢωᵢ/m) = (oh_eff @ S_w) / denom`` — so the
+    client→barycenter distances that elect medoids (and the intra radius) are
+    plain JL estimates, and nothing here ever touches full W.  The backend's
+    own distance primitives run on the sketch under
+    :func:`instrument.suspend_w_passes` (an S-wide sweep is not a W pass).
+
+    Returns ``(assignment, oh_eff, counts, denom, med_d2)``.
+    """
+    k = center_idx.shape[0]
+    with instrument.suspend_w_passes():
+        centers = jnp.take(s_w, center_idx, axis=0)
+        d2c = backend.sq_dists_to_points(s_w, centers)
+        assignment = pin_assignment(d2c, center_idx)
+        oh_eff, counts, denom = aggregation_matrix(assignment, k, center_idx,
+                                                   client_weights)
+        s_b = (oh_eff @ s_w.astype(jnp.float32)) / denom[:, None]    # (K, S)
+        med_d2 = backend.sq_dists_to_points(s_w, s_b)
+    return assignment, oh_eff, counts, denom, med_d2
+
+
+def sketched_fused_round(backend: bk.Backend, w: jax.Array, s_w: jax.Array,
+                         center_idx: jax.Array, *,
+                         client_weights: jax.Array | None = None,
+                         **kw) -> FusedStats:
+    """One coalition round given a precomputed sketch: ONE full sweep over W.
+
+    The classic two-pass structure collapses: assignment distances AND the
+    medoid-electing distances come from ``s_w``; the only full-W traffic left
+    is the barycenter segment matmul (which self-counts its single pass).
+    With the sketch construction itself (one more sweep) the complete
+    sketched round costs ≤ 2 full sweeps — never more than the exact fused
+    round, and the sweep that remains is a pure matmul.
+    """
+    assignment, oh_eff, counts, denom, med_d2 = sketch_stage(
+        backend, s_w, center_idx, client_weights=client_weights)
+    b = backend.segment_sum(oh_eff, w, **kw) / denom[:, None]
+    theta = jnp.mean(b, axis=0)
+    return FusedStats(assignment=assignment, barycenters=b, counts=counts,
+                      med_d2=med_d2, theta=theta)
+
+
 # --- dispatcher ------------------------------------------------------------------
 
 def fused_round(w: jax.Array, center_idx: jax.Array, *,
                 client_weights: jax.Array | None = None,
-                backend: str | bk.Backend = "xla", **kw) -> FusedRound:
+                backend: str | bk.Backend = "xla",
+                sketcher: sk_mod.Sketcher | None = None, **kw) -> FusedRound:
     """One fused Algorithm-1 round (Steps II-IV) over client weights ``w``.
 
     Resolves ``backend.fused_round`` when the backend provides it, else the
@@ -348,11 +435,27 @@ def fused_round(w: jax.Array, center_idx: jax.Array, *,
     The per-coalition intra radius rides along for free: it is O(N·K)
     algebra over the same accumulated ``med_d2`` that elects the medoids, so
     the trace-time W-pass count stays exactly 2 (tested).
+
+    A non-identity ``sketcher`` reroutes pass 1 and the medoid election to
+    the (N, S) sketch (see :func:`sketched_fused_round`): ≤ 2 full sweeps
+    total, exactly 1 once the sketch is in hand.  Sharded backends provide
+    their own ``sketched_fused_round`` (partial sketches psum along the mesh
+    axis); every other backend sketches densely and shares one route.
     """
     backend = bk.get_backend(backend)
-    impl = (backend.fused_round if backend.fused_round is not None
-            else functools.partial(compose_fused_round, backend))
-    s = impl(w, center_idx, client_weights=client_weights, **kw)
+    if sketcher is not None and not sketcher.is_identity:
+        if backend.sketched_fused_round is not None:
+            s = backend.sketched_fused_round(
+                w, center_idx, client_weights=client_weights,
+                sketcher=sketcher, **kw)
+        else:
+            s_w = sk_mod.sketch_matrix(sketcher, w)
+            s = sketched_fused_round(backend, w, s_w, center_idx,
+                                     client_weights=client_weights, **kw)
+    else:
+        impl = (backend.fused_round if backend.fused_round is not None
+                else functools.partial(compose_fused_round, backend))
+        s = impl(w, center_idx, client_weights=client_weights, **kw)
     new_center_idx = medoid_from_d2(s.med_d2, s.assignment, client_weights)
     radius = obs_metrics.intra_radius(s.med_d2, s.assignment,
                                       center_idx.shape[0], client_weights)

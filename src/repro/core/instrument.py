@@ -26,9 +26,30 @@ _W_PASSES: contextvars.ContextVar[int] = contextvars.ContextVar(
     "repro_w_passes", default=0)
 
 
+_SUSPENDED: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_w_passes_suspended", default=False)
+
+
 def count_w_pass(n: int = 1) -> None:
     """Record ``n`` full sweeps over the (N, D) weight matrix."""
+    if _SUSPENDED.get():
+        return
     _W_PASSES.set(_W_PASSES.get() + n)
+
+
+@contextlib.contextmanager
+def suspend_w_passes() -> Iterator[None]:
+    """Make :func:`count_w_pass` a no-op inside the block.
+
+    The sketched round reuses the backend distance primitives on the
+    (N, S) sketch, whose self-counting would otherwise pollute the full-W
+    ledger — an S-wide sweep is K/N-sized traffic, not a W pass.
+    """
+    tok = _SUSPENDED.set(True)
+    try:
+        yield
+    finally:
+        _SUSPENDED.reset(tok)
 
 
 @contextlib.contextmanager

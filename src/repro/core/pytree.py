@@ -26,17 +26,59 @@ def tree_bytes(tree: PyTree) -> int:
     return int(sum(np.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(tree)))
 
 
-def flatten(tree: PyTree, dtype=jnp.float32) -> jax.Array:
-    """Flatten a single model pytree into a 1-D weight vector ω ∈ R^D."""
-    leaves = jax.tree.leaves(tree)
+def is_geometry_leaf(leaf) -> bool:
+    """True for leaves that enter the flattened weight geometry.
+
+    Only floating-point (inexact) leaves are part of ω ∈ R^D; integer / bool
+    buffers (position ids, step counters, masks) are carried through
+    aggregation untouched rather than corrupted by a float round-trip.
+    """
+    return jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact)
+
+
+def geometry_dtype(tree: PyTree):
+    """Promoted dtype of the float leaves — the native flatten dtype.
+
+    Promotion (e.g. bf16 ⊔ f32 → f32) is widening for every float leaf, so a
+    flatten/unflatten round-trip through this dtype is bit-exact.
+    """
+    dts = [l.dtype for l in jax.tree.leaves(tree) if is_geometry_leaf(l)]
+    if not dts:
+        raise ValueError("pytree has no floating-point leaves")
+    return jnp.result_type(*dts)
+
+
+def geometry_size(tree: PyTree) -> int:
+    """D: number of scalars in the float geometry (excludes int/bool leaves)."""
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)
+                   if is_geometry_leaf(l)))
+
+
+def flatten(tree: PyTree, dtype=None) -> jax.Array:
+    """Flatten a model pytree's float leaves into a 1-D weight vector ω ∈ R^D.
+
+    ``dtype=None`` (default) uses :func:`geometry_dtype` — the promoted native
+    float dtype — so the round-trip with :func:`unflatten` is bit-exact.
+    Non-float leaves are excluded; recover them from the template.
+    """
+    if dtype is None:
+        dtype = geometry_dtype(tree)
+    leaves = [l for l in jax.tree.leaves(tree) if is_geometry_leaf(l)]
     return jnp.concatenate([l.astype(dtype).reshape(-1) for l in leaves])
 
 
 def unflatten(vec: jax.Array, like: PyTree) -> PyTree:
-    """Inverse of :func:`flatten` given a structural template."""
+    """Inverse of :func:`flatten` given a structural template.
+
+    Float leaves are sliced out of ``vec`` and cast back to their native
+    dtype; non-float leaves are taken verbatim from ``like``.
+    """
     leaves, treedef = jax.tree.flatten(like)
     out, off = [], 0
     for l in leaves:
+        if not is_geometry_leaf(l):
+            out.append(l)
+            continue
         n = int(np.prod(l.shape))
         out.append(vec[off : off + n].reshape(l.shape).astype(l.dtype))
         off += n
@@ -52,9 +94,13 @@ def unstack_clients(stacked: PyTree, n: int) -> list[PyTree]:
     return [jax.tree.map(lambda l: l[i], stacked) for i in range(n)]
 
 
-def client_matrix(stacked: PyTree, dtype=jnp.float32,
+def client_matrix(stacked: PyTree, dtype=None,
                   select=None) -> jax.Array:
     """``(n_clients, D)`` weight matrix from a stacked client pytree.
+
+    Only float leaves enter the matrix (see :func:`is_geometry_leaf`);
+    ``dtype=None`` uses the promoted native float dtype of the selected
+    leaves, so the round-trip with :func:`matrix_to_stacked` is bit-exact.
 
     ``select``: optional predicate on the leaf path string (e.g.
     ``lambda p: 'router' in p``) restricting which parameter groups enter the
@@ -64,12 +110,16 @@ def client_matrix(stacked: PyTree, dtype=jnp.float32,
     flat = jax.tree_util.tree_flatten_with_path(stacked)[0]
     leaves = []
     for path, leaf in flat:
+        if not is_geometry_leaf(leaf):
+            continue
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                         for p in path)
         if select is None or select(name):
             leaves.append(leaf)
     if not leaves:
         raise ValueError("select matched no parameter leaves")
+    if dtype is None:
+        dtype = jnp.result_type(*[l.dtype for l in leaves])
     n = leaves[0].shape[0]
     return jnp.concatenate(
         [l.astype(dtype).reshape(n, -1) for l in leaves], axis=1
@@ -77,11 +127,18 @@ def client_matrix(stacked: PyTree, dtype=jnp.float32,
 
 
 def matrix_to_stacked(mat: jax.Array, like_single: PyTree) -> PyTree:
-    """Inverse of :func:`client_matrix`; ``like_single`` is one client's pytree."""
+    """Inverse of :func:`client_matrix`; ``like_single`` is one client's pytree.
+
+    Float leaves come from ``mat`` (cast back to native dtype); non-float
+    leaves are broadcast from the single-client template across clients.
+    """
     n = mat.shape[0]
     leaves, treedef = jax.tree.flatten(like_single)
     out, off = [], 0
     for l in leaves:
+        if not is_geometry_leaf(l):
+            out.append(jnp.broadcast_to(l[None], (n,) + l.shape))
+            continue
         sz = int(np.prod(l.shape))
         out.append(mat[:, off : off + sz].reshape((n,) + l.shape).astype(l.dtype))
         off += sz

@@ -119,11 +119,13 @@ PyTree = Any
 
 
 def bytes_per_param(w: jax.Array) -> int:
-    """On-wire bytes per parameter, derived from the weight matrix dtype.
+    """On-wire bytes per parameter for a single-dtype array.
 
     The comm accounting must track whatever actually crosses the wire — a
     bf16 or fp8 deployment halves/quarters the bytes, and a pinned ``4``
-    would silently misreport it.
+    would silently misreport it.  The engines themselves bill whole models
+    via :func:`pytree.tree_bytes` (per-leaf dtypes; a bf16 model is not a
+    flattened-f32 matrix), this helper prices one homogeneous array.
     """
     return jnp.dtype(w.dtype).itemsize
 
@@ -605,7 +607,7 @@ class Federation:
         akey = jax.random.fold_in(key, sim_mod.AVAILABILITY_STREAM)
         key, gp, state, bary, w0, y0 = self._round0_jit(
             init_params, client_data, key)
-        model_bytes = w0.shape[1] * bytes_per_param(w0)
+        model_bytes = pytree.tree_bytes(gp)
         dev_time = sim_mod.device_round_time(self._fleet, model_bytes,
                                              scfg.local_work)
         astate = sim_mod.init_availability(akey, self._fleet,
@@ -626,7 +628,7 @@ class Federation:
         akey = jax.random.fold_in(key, sim_mod.AVAILABILITY_STREAM)
         key, gp, state, bary, w0, y0 = self._round0_jit(
             init_params, client_data, key)
-        model_bytes = w0.shape[1] * bytes_per_param(w0)
+        model_bytes = pytree.tree_bytes(gp)
         dev_time = sim_mod.device_round_time(self._fleet, model_bytes,
                                              scfg.local_work)
         e_event = sim_mod.device_event_energy(self._fleet, model_bytes,
@@ -702,7 +704,7 @@ class Federation:
 
         def step(carry: _SemiAsyncCarry, _):
             key, kr = jax.random.split(carry.key)    # same chain as 'scan'
-            model_bytes = carry.buf.shape[1] * bytes_per_param(carry.buf)
+            model_bytes = pytree.tree_bytes(carry.gp)
             dev_time = sim_mod.device_round_time(fleet, model_bytes,
                                                  scfg.local_work)
             mask, astate = sim_mod.sample_mask(
@@ -769,7 +771,7 @@ class Federation:
             key, kr = jax.random.split(carry.key)    # same chain as 'scan'
             online, astate = sim_mod.sample_mask(carry.astate, fleet,
                                                  scfg.participation)
-            model_bytes = carry.buf.shape[1] * bytes_per_param(carry.buf)
+            model_bytes = pytree.tree_bytes(carry.gp)
             dev_time = sim_mod.device_round_time(fleet, model_bytes,
                                                  scfg.local_work)
             e_event = sim_mod.device_event_energy(fleet, model_bytes,
@@ -895,7 +897,7 @@ class Federation:
         if cfg.fleet_size is not None:
             rec["fleet_size"] = cfg.fleet_size
         if hasattr(carry, "buf"):
-            model_bytes = carry.buf.shape[1] * bytes_per_param(carry.buf)
+            model_bytes = pytree.tree_bytes(carry.gp)
             rec.update(
                 fleet=cfg.sim.fleet, scenario=cfg.sim.scenario,
                 model_bytes=int(model_bytes),

@@ -49,6 +49,7 @@ from repro.compat import shard_map
 from repro.core import backends as bk
 from repro.core import fused as fz
 from repro.core import instrument
+from repro.core import sketch as sk_mod
 
 
 def _finish_pass1(d2c, center_idx, client_weights):
@@ -127,6 +128,80 @@ def stats_specs(axis: str) -> fz.FusedStats:
                          counts=P(), med_d2=P(), theta=P(axis))
 
 
+# --- sketched round: psum partial sketches, one local bary/θ sweep ---------------
+
+def _pass2_xla(w_loc, oh_eff, denom, *, chunk):
+    return fz._xla_bary_theta(w_loc, oh_eff, denom, chunk)
+
+
+def _pass2_dot(w_loc, oh_eff, denom, *, chunk):
+    b = (oh_eff @ w_loc.astype(jnp.float32)) / denom[:, None]
+    return b, jnp.mean(b, axis=0)
+
+
+def _pass2_pallas(w_loc, oh_eff, denom, *, chunk):
+    from repro.kernels import ops as kops
+
+    b = kops.segment_sum(oh_eff, w_loc) / denom[:, None]
+    return b, jnp.mean(b, axis=0)
+
+
+_SKETCH_PASS2 = {"xla": _pass2_xla, "dot": _pass2_dot, "pallas": _pass2_pallas}
+
+
+def _sq_to_points(x, p):
+    """Small replicated (C, K) sketch-space distances (diff-square form)."""
+    diff = x[:, None, :] - p[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def _local_sketched(pass2, sketcher, w_loc, center_idx, client_weights, *,
+                    chunk, axis):
+    """Per-shard sketched round: each shard reads its W tile exactly twice —
+    once to build its partial sketch (psum-stitched into the replicated
+    (C, S) sketch), once for its barycenter/θ tiles.  Assignment, medoid
+    election, and the intra radius are replicated sketch-space algebra, so
+    the only collectives are the (C, S) sketch psum — still never O(D)."""
+    instrument.count_w_pass()                    # sketch sweep (local tile)
+    off = jax.lax.axis_index(axis) * w_loc.shape[1]
+    s_w = jax.lax.psum(sk_mod.sketch_block(sketcher, w_loc, col_offset=off),
+                       axis)
+    d2c = _sq_to_points(s_w, s_w[center_idx])
+    assignment, oh_eff, counts, denom = _finish_pass1(
+        d2c, center_idx, client_weights)
+    s_b = (oh_eff @ s_w) / denom[:, None]                    # (K, S)
+    med_d2 = _sq_to_points(s_w, s_b)
+    instrument.count_w_pass()                    # bary/θ sweep (local tile)
+    b, theta = pass2(w_loc, oh_eff, denom, chunk=chunk)
+    return fz.FusedStats(assignment=assignment, barycenters=b, counts=counts,
+                         med_d2=med_d2, theta=theta)
+
+
+def _sharded_sketched_round(base_name, mesh, axis, check, w, center_idx, *,
+                            sketcher, client_weights=None, chunk=None, **_):
+    parts = mesh.shape[axis]
+    n, d = w.shape
+    pad = (-d) % parts
+    wp = jnp.pad(w, ((0, 0), (0, pad))) if pad else w
+    body = partial(_local_sketched, _SKETCH_PASS2[base_name], sketcher,
+                   chunk=fz.resolve_chunk(chunk, (d + pad) // parts),
+                   axis=axis)
+    out_specs = stats_specs(axis)
+    if client_weights is None:
+        f = shard_map(lambda wl, ci: body(wl, ci, None), mesh=mesh,
+                      in_specs=(P(None, axis), P()), out_specs=out_specs,
+                      check_vma=check)
+        s = f(wp, center_idx)
+    else:
+        f = shard_map(body, mesh=mesh,
+                      in_specs=(P(None, axis), P(), P()), out_specs=out_specs,
+                      check_vma=check)
+        s = f(wp, center_idx, client_weights)
+    if pad:
+        s = s._replace(barycenters=s.barycenters[:, :d], theta=s.theta[:d])
+    return s
+
+
 def _sharded_fused_round(local, mesh, axis, check, w, center_idx, *,
                          client_weights=None, chunk=None, **_):
     parts = mesh.shape[axis]
@@ -167,7 +242,8 @@ def sharded_backend(base: str | bk.Backend, mesh, *,
             f"(choose from {sorted(_LOCALS)})")
     if axis not in mesh.axis_names:
         raise ValueError(f"mesh has no {axis!r} axis (axes: {mesh.axis_names})")
-    impl = partial(_sharded_fused_round, _LOCALS[base.name], mesh, axis,
-                   base.name not in _UNCHECKED)
+    check = base.name not in _UNCHECKED
+    impl = partial(_sharded_fused_round, _LOCALS[base.name], mesh, axis, check)
+    sk_impl = partial(_sharded_sketched_round, base.name, mesh, axis, check)
     return base._replace(name=f"{base.name}@{axis}{mesh.shape[axis]}",
-                         fused_round=impl)
+                         fused_round=impl, sketched_fused_round=sk_impl)

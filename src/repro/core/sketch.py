@@ -1,0 +1,230 @@
+"""Sketched weight geometry — cheap coalition assignment at framework scale.
+
+At D ≈ 1e8 the pairwise-distance pass over the (N, D) client weight matrix
+is the round's wall (ROADMAP item 2).  Euclidean geometry survives linear
+dimensionality reduction: a seeded random projection (Johnson–Lindenstrauss)
+or count-sketch maps each client row to an (S,)-vector with S ≪ D such that
+``‖S(ω_i) - S(ω_j)‖² ≈ ‖ω_i - ω_j‖²``, so coalition *assignment* and medoid
+election can run on the (N, S) sketch while barycenters/θ still stream the
+full (N, D) tiles exactly once.
+
+Both non-trivial sketchers are **linear**, which the fused round exploits:
+``S(Σ αᵢ ωᵢ) = Σ αᵢ S(ωᵢ)``, so sketched barycenters are a (K, N) @ (N, S)
+matmul — pass 2 of the classic round collapses into sketch space and the
+sketched fused round touches full W exactly once (asserted at trace time).
+
+Determinism contract: every sketch column's randomness is derived from
+``fold_in(key(seed), global_column_index)``, so the *map* is identical for
+any chunking of D and any sharding of the mesh ``data`` axis — a shard
+computes its partial sketch with ``col_offset = axis_index * D_local`` and
+partials simply sum (zero-padded columns contribute exactly zero).  Results
+across different chunkings agree to float summation-order roundoff; a fixed
+chunking is bit-deterministic in (seed, S, D).
+
+Registry mirrors the strategy/backend registries: ``identity`` (no sketch —
+the exact path, bit-for-bit), ``rproj`` (seeded Rademacher projection,
+chunked over D so the (D, S) matrix is never densified), ``countsketch``
+(strided signed bucketing — one memory-bound reshape-sum over W, no matmul
+and no scatter).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import instrument
+
+#: Columns of W consumed per sketch step; bounds the densified projection
+#: block (chunk, S) for rproj.  Own constant (not fused.DEFAULT_CHUNK) so
+#: sketch <- fused imports stay acyclic.
+DEFAULT_CHUNK = 65536
+
+
+@dataclasses.dataclass(frozen=True)
+class Sketcher:
+    """A seeded linear map R^D -> R^S applied row-wise to weight matrices.
+
+    ``partial(w_block, col_offset)`` sketches a *column block* of W whose
+    first column has global index ``col_offset``; full sketches are sums of
+    partials.  ``col_offset`` may be traced (sharded offsets).
+    """
+
+    name: str
+    dim: int | None
+    seed: int = 0
+
+    @property
+    def is_identity(self) -> bool:
+        return self.dim is None
+
+    def partial(self, w: jax.Array, col_offset=0) -> jax.Array:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentitySketcher(Sketcher):
+    """No sketch: geometry runs on full W (the exact, pre-sketch path)."""
+
+    name: str = "identity"
+    dim: int | None = None
+
+    def partial(self, w: jax.Array, col_offset=0) -> jax.Array:
+        return w
+
+
+@dataclasses.dataclass(frozen=True)
+class RProjSketcher(Sketcher):
+    """Seeded Rademacher random projection, scaled by 1/sqrt(S).
+
+    The (D, S) projection matrix never materializes: each *global* column
+    index folds into the seed key and draws its own (S,) Rademacher row, so
+    any D-chunking (and any mesh sharding) reproduces the same map.
+    """
+
+    def partial(self, w: jax.Array, col_offset=0) -> jax.Array:
+        key = jax.random.key(self.seed)
+        cols = col_offset + jnp.arange(w.shape[1])
+
+        def row(j):
+            return jax.random.rademacher(jax.random.fold_in(key, j),
+                                         (self.dim,), dtype=jnp.float32)
+
+        r = jax.vmap(row)(cols)                       # (d_block, S)
+        scale = 1.0 / jnp.sqrt(jnp.float32(self.dim))
+        return (w.astype(jnp.float32) @ r) * scale
+
+
+@dataclasses.dataclass(frozen=True)
+class CountSketcher(Sketcher):
+    """Count-sketch: each column folds into one signed bucket of S.
+
+    The bucket is *strided* — global column j lands in ``j mod S`` — with a
+    seeded per-column Rademacher sign.  Random signs alone make the sketch
+    unbiased (``E⟨Sx, Sy⟩ = ⟨x, y⟩``: cross terms between colliding columns
+    vanish in expectation), and for dense weight geometry the fixed stride
+    collision pattern matches a random hash's variance; what the stride buys
+    is the aggregation shape: a signed reshape-sum — one memory-bound pass
+    over W, no scatter (XLA CPU scatter-add is ~20x slower at D=8M, the
+    regime the ``federation_sketch`` CI benchmark gates).  A chunk at global
+    offset ``o`` reduces into locally-strided buckets and rolls them by
+    ``o mod S``, so partials at their true offsets still sum to the full
+    sketch for any chunking or sharding.
+    """
+
+    def partial(self, w: jax.Array, col_offset=0) -> jax.Array:
+        n, c = w.shape
+
+        def signs(off):
+            key = jax.random.key(self.seed)
+            return jax.vmap(lambda j: jax.random.rademacher(
+                jax.random.fold_in(key, j), (), dtype=jnp.float32))(
+                    off + jnp.arange(c))
+
+        if isinstance(col_offset, jax.core.Tracer):
+            sg = signs(col_offset)            # sharded: offset known at run
+        else:
+            # static offset: the sign stream is input-independent — bake it
+            # as a compile-time constant so the compiled sketch is just the
+            # signed reshape-sum (one memory-bound pass over W)
+            with jax.ensure_compile_time_eval():
+                sg = signs(col_offset)
+        x = w.astype(jnp.float32) * sg[None, :]
+        rem = c % self.dim
+        main = c - rem
+        if main:
+            local = jnp.sum(x[:, :main].reshape(n, -1, self.dim), axis=1)
+        else:
+            local = jnp.zeros((n, self.dim), jnp.float32)
+        if rem:
+            # tail columns land in buckets 0..rem-1 (main % S == 0); adding
+            # the slice beats zero-padding x, which would copy all of W
+            local = local.at[:, :rem].add(x[:, main:])
+        return jnp.roll(local, col_offset % self.dim, axis=1)
+
+
+def sketch_block(sketcher: Sketcher, w: jax.Array, col_offset=0,
+                 chunk: int | None = None) -> jax.Array:
+    """(N, S) sketch of a column block whose first global column is
+    ``col_offset`` (may be traced — mesh-shard offsets).
+
+    Streams the block in column chunks (scan over dynamic slices, the block
+    zero-padded *at the end* so global column indices are unchanged; padded
+    columns sketch to exactly zero under both maps) — the (chunk, S)
+    projection tile is the only densified state.  Does NOT count a W pass:
+    callers sketching full W do (:func:`sketch_matrix`, the sharded bodies).
+    """
+    n, d = w.shape
+    c = min(d, chunk if chunk is not None else _auto_chunk(sketcher))
+    n_chunks = -(-d // c)
+    pad = n_chunks * c - d
+    wp = jnp.pad(w, ((0, 0), (0, pad))) if pad else w
+    if n_chunks == 1:
+        return sketcher.partial(wp, col_offset=col_offset)
+
+    def body(acc, i):
+        blk = jax.lax.dynamic_slice(wp, (0, i * c), (n, c))
+        return acc + sketcher.partial(blk, col_offset=col_offset + i * c), None
+
+    out, _ = jax.lax.scan(body, jnp.zeros((n, sketcher.dim), jnp.float32),
+                          jnp.arange(n_chunks))
+    return out
+
+
+def sketch_matrix(sketcher: Sketcher, w: jax.Array,
+                  chunk: int | None = None) -> jax.Array:
+    """(N, S) sketch of the full (N, D) weight matrix — ONE full W sweep."""
+    if sketcher.is_identity:
+        return w
+    instrument.count_w_pass()
+    return sketch_block(sketcher, w, col_offset=0, chunk=chunk)
+
+
+def _auto_chunk(sketcher: Sketcher) -> int:
+    """Cap the densified (chunk, S) rproj block at ~16M floats.
+
+    Countsketch never densifies anything chunk-sized, so it takes the whole
+    block in one go: with a *static* column offset the per-column sign
+    stream is concrete at trace time (a one-time eager threefry sweep that
+    embeds as a constant), leaving only the signed reshape-sum in the
+    compiled program.  Scanning it in chunks would trace the offsets and
+    drag the threefry generation into every call.
+    """
+    if sketcher.name == "rproj" and sketcher.dim:
+        return max(1024, min(DEFAULT_CHUNK, (1 << 24) // sketcher.dim))
+    if sketcher.name == "countsketch":
+        return 1 << 62
+    return DEFAULT_CHUNK
+
+
+# -- registry (mirrors strategies/backends) ----------------------------------------
+
+_REGISTRY: dict[str, Callable[..., Sketcher]] = {}
+
+
+def register_sketcher(name: str, factory: Callable[..., Sketcher]) -> None:
+    _REGISTRY[name] = factory
+
+
+def available_sketchers() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def make_sketcher(name: str, *, dim: int | None = None,
+                  seed: int = 0) -> Sketcher:
+    """Build a registered sketcher; ``dim`` defaults to 256 where needed."""
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown sketch '{name}' "
+                         f"(registered: {', '.join(available_sketchers())})")
+    return _REGISTRY[name](dim=dim, seed=seed)
+
+
+register_sketcher("identity", lambda dim=None, seed=0: IdentitySketcher())
+register_sketcher(
+    "rproj", lambda dim=None, seed=0: RProjSketcher(
+        name="rproj", dim=dim or 256, seed=seed))
+register_sketcher(
+    "countsketch", lambda dim=None, seed=0: CountSketcher(
+        name="countsketch", dim=dim or 256, seed=seed))

@@ -57,6 +57,7 @@ import jax.numpy as jnp
 from repro.core import aggregation
 from repro.core import backends as bk
 from repro.core import coalitions as co
+from repro.core import sketch as sk_mod
 
 PyTree = Any
 
@@ -248,6 +249,11 @@ class CoalitionStrategy(Strategy):
     #: default (:func:`repro.core.fused.default_chunk`).  Fused and composed
     #: paths resolve the same value, preserving their bitwise equality.
     chunk: int | None = None
+    #: optional sketched-geometry stage: a non-identity sketcher runs
+    #: assignment + medoid election on the (N, S) sketch (≤ 2 full W sweeps,
+    #: one once the sketch is built); None/identity is the exact path,
+    #: bit-for-bit equal to the pre-sketch round.
+    sketcher: sk_mod.Sketcher | None = None
 
     hierarchical: ClassVar[bool] = True
 
@@ -266,7 +272,7 @@ class CoalitionStrategy(Strategy):
             cw = mask if cw is None else cw * mask
         return co.run_round(w, state, backend=self.backend,
                             client_weights=cw, fused=self.fused,
-                            chunk=self.chunk)
+                            chunk=self.chunk, sketcher=self.sketcher)
 
     def round(self, w, state, mask=None):
         r = self._coalition_round(w, state, mask)
@@ -326,23 +332,37 @@ def _make_fedavg_trimmed(*, n_clients, n_coalitions=1, backend="xla",
                                  trim=trim)
 
 
+def _resolve_sketcher(sketch=None, sketch_dim=None,
+                      sketch_seed=0) -> sk_mod.Sketcher | None:
+    """Factory plumbing for the ``--sketch``/``--sketch-dim`` CLI knobs."""
+    if sketch is None or isinstance(sketch, sk_mod.Sketcher):
+        return sketch
+    return sk_mod.make_sketcher(sketch, dim=sketch_dim, seed=sketch_seed)
+
+
 @register_strategy("coalition")
 def _make_coalition(*, n_clients, n_coalitions=3, backend="xla",
                     client_weights=None, fused=True, chunk=None,
+                    sketch=None, sketch_dim=None, sketch_seed=0,
                     **_) -> Strategy:
     return CoalitionStrategy(n_clients=n_clients, n_groups=n_coalitions,
                              backend=bk.get_backend(backend),
                              client_weights=client_weights, fused=fused,
-                             chunk=chunk)
+                             chunk=chunk,
+                             sketcher=_resolve_sketcher(sketch, sketch_dim,
+                                                        sketch_seed))
 
 
 @register_strategy("coalition_topk")
 def _make_coalition_topk(*, n_clients, n_coalitions=3, backend="xla",
                          client_weights=None, top_m=None, fused=True,
-                         chunk=None, **_) -> Strategy:
+                         chunk=None, sketch=None, sketch_dim=None,
+                         sketch_seed=0, **_) -> Strategy:
     if top_m is None:
         top_m = max(1, n_coalitions - 1)
     return TopKCoalitionStrategy(n_clients=n_clients, n_groups=n_coalitions,
                                  backend=bk.get_backend(backend),
                                  client_weights=client_weights, top_m=top_m,
-                                 fused=fused, chunk=chunk)
+                                 fused=fused, chunk=chunk,
+                                 sketcher=_resolve_sketcher(sketch, sketch_dim,
+                                                            sketch_seed))

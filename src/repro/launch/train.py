@@ -38,8 +38,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sketch as sketch_mod
 from repro.core import strategies
 from repro.data import partition
+from repro.models import zoo as zoo_mod
 
 
 def _profiler(profile_dir: str | None):
@@ -62,6 +64,8 @@ _EXTRA_CONSUMERS = {
     "trim": ("fedavg_trimmed",),
     "client_weights": ("fedavg_weighted", "coalition", "coalition_topk"),
     "chunk": ("coalition", "coalition_topk"),
+    "sketch": ("coalition", "coalition_topk"),
+    "sketch_dim": ("coalition", "coalition_topk"),
 }
 
 
@@ -77,6 +81,13 @@ def _strategy_extras(args) -> dict:
             [float(v) for v in args.client_weights.split(",")], jnp.float32)
     if args.chunk is not None:
         extras["chunk"] = args.chunk
+    if args.sketch != "identity":
+        extras["sketch"] = args.sketch
+        if args.sketch_dim is not None:
+            extras["sketch_dim"] = args.sketch_dim
+    elif args.sketch_dim is not None:
+        raise SystemExit("--sketch-dim requires --sketch rproj|countsketch "
+                         "(identity has no sketch dimension)")
     for name in extras:
         if args.method not in _EXTRA_CONSUMERS[name]:
             raise SystemExit(
@@ -90,7 +101,7 @@ def run_fl(args) -> dict:
     from repro.core.client import ClientConfig
     from repro.core.server import Federation, FederationConfig
     from repro.data import loader, synthetic
-    from repro.models import cnn
+    from repro.models import zoo
 
     # Fail fast on sharding/cohort flags, before any data touches memory:
     # a bad mesh spec or an undersized fleet should not cost a dataset load.
@@ -144,14 +155,16 @@ def run_fl(args) -> dict:
                           energy_budget=args.energy_budget,
                           max_events=args.max_events, seed=args.sim_seed,
                           scenario=args.scenario, rho=args.rho))
-    params = cnn.init(jax.random.key(args.seed))
+    model = zoo.make_model(args.model)
+    params = model.init(jax.random.key(args.seed))
     store = None
     if args.snapshot_dir is not None:
         from repro.serve import ModelStore
 
         store = ModelStore(args.snapshot_dir, keep=args.snapshot_keep)
     t0 = time.time()
-    fed = Federation(cnn.loss_fn, lambda p: cnn.accuracy(p, xte_j, yte_j),
+    fed = Federation(model.loss_fn,
+                     lambda p: model.accuracy(p, xte_j, yte_j),
                      cfg, strategy=strategy)
     # --ckpt-dir without --ckpt-every still checkpoints (round 0 + final);
     # Federation.run rejects a ckpt_dir that would never be written to
@@ -183,6 +196,7 @@ def run_fl(args) -> dict:
     if sink is not None:
         sink.close()
     out = {"mode": "fl", "method": args.method, "engine": args.engine,
+           "model": args.model, "sketch": args.sketch,
            "regime": args.regime,
            "scenario": args.scenario, "rho": args.rho,
            "scenario_spearman": round(scn.metadata["spearman"], 4),
@@ -312,6 +326,20 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--n-test", type=int, default=4000)
     ap.add_argument("--backend", default="xla",
                     choices=["xla", "dot", "pallas"])
+    ap.add_argument("--model", default="cnn",
+                    choices=sorted(zoo_mod.available_models()),
+                    help="FL model from the repro.models.zoo registry; the "
+                         "federation loop is model-agnostic (per-pytree-leaf, "
+                         "native float dtypes, non-float leaves untouched)")
+    ap.add_argument("--sketch", default="identity",
+                    choices=sorted(sketch_mod.available_sketchers()),
+                    help="coalition methods: run assignment + medoid "
+                         "election on a seeded (N, S) sketch of the client "
+                         "weights instead of full (N, D) distances; "
+                         "'identity' is the exact path, bit-for-bit")
+    ap.add_argument("--sketch-dim", type=int, default=None,
+                    help="sketch dimension S (rproj/countsketch; "
+                         "default 256)")
     # fl: sharded federation (repro.core.sharded + repro.sim.cohort)
     ap.add_argument("--mesh", default=None,
                     help="run the coalition fused round mesh-parallel: "

@@ -1,5 +1,6 @@
-from repro.models import cnn, config, encdec, layers, moe, ssm, transformer
+from repro.models import (cnn, config, encdec, layers, moe, ssm,
+                          tiny_transformer, transformer, zoo)
 from repro.models.config import ModelConfig
 
-__all__ = ["cnn", "config", "encdec", "layers", "moe", "ssm", "transformer",
-           "ModelConfig"]
+__all__ = ["cnn", "config", "encdec", "layers", "moe", "ssm",
+           "tiny_transformer", "transformer", "zoo", "ModelConfig"]

@@ -1,0 +1,127 @@
+"""A tiny row-token transformer classifier for the FL loop (``--model
+transformer_tiny``).
+
+Treats a (B, 28, 28, 1) image as 28 tokens of dim 28 (one per pixel row),
+runs 2 pre-LN attention blocks at d_model=32, mean-pools, and classifies.
+Two properties make it the federation contract's stress model rather than a
+serious classifier:
+
+  * float params are **bfloat16** — client updates must round-trip through
+    the coalition geometry in their native dtype (no silent f32 widening on
+    the way back, satellite #1);
+  * ``pos_ids`` is an **int32 buffer leaf** inside the params pytree, used
+    for the positional-embedding lookup — federation must carry it through
+    untouched while excluding it from flatten/geometry.
+
+Math runs in f32 (params cast up per-use, logits/loss in f32); gradients
+land back in each leaf's native dtype, so the (N, D) client matrix the
+coalition round sees is genuinely bf16.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TinyConfig(NamedTuple):
+    n_tokens: int = 28        # image rows as tokens
+    d_in: int = 28            # pixels per row
+    d_model: int = 32
+    n_heads: int = 4
+    n_blocks: int = 2
+    mlp_mult: int = 4
+    n_classes: int = 10
+
+
+def init(key: jax.Array, cfg: TinyConfig = TinyConfig(),
+         dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3 + 4 * cfg.n_blocks)
+
+    def dense(k, n_in, n_out):
+        w = (jax.random.normal(k, (n_in, n_out), jnp.float32)
+             * jnp.sqrt(1.0 / n_in)).astype(dtype)
+        return {"w": w, "b": jnp.zeros((n_out,), dtype)}
+
+    def ln():
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+
+    blocks = []
+    for i in range(cfg.n_blocks):
+        k_qkv, k_out, k_up, k_dn = ks[3 + 4 * i: 7 + 4 * i]
+        blocks.append({
+            "ln1": ln(),
+            "qkv": dense(k_qkv, cfg.d_model, 3 * cfg.d_model),
+            "attn_out": dense(k_out, cfg.d_model, cfg.d_model),
+            "ln2": ln(),
+            "mlp_up": dense(k_up, cfg.d_model, cfg.mlp_mult * cfg.d_model),
+            "mlp_dn": dense(k_dn, cfg.mlp_mult * cfg.d_model, cfg.d_model),
+        })
+    return {
+        "embed": dense(ks[0], cfg.d_in, cfg.d_model),
+        "pos_table": (jax.random.normal(ks[1], (cfg.n_tokens, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(dtype),
+        # int32 buffer leaf: rides the params pytree through federation
+        # untouched (excluded from geometry by repro.core.pytree).
+        "pos_ids": jnp.arange(cfg.n_tokens, dtype=jnp.int32),
+        "blocks": blocks,
+        "ln_f": ln(),
+        "head": dense(ks[2], cfg.d_model, cfg.n_classes),
+    }
+
+
+def _f32(p):
+    return jax.tree.map(lambda l: l.astype(jnp.float32), p)
+
+
+def _layernorm(x, p):
+    p = _f32(p)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+
+
+def _dense(x, p):
+    p = _f32(p)
+    return x @ p["w"] + p["b"]
+
+
+def _attention(x, blk, cfg: TinyConfig):
+    b, t, d = x.shape
+    hd = d // cfg.n_heads
+    qkv = _dense(x, blk["qkv"]).reshape(b, t, 3, cfg.n_heads, hd)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]   # (b, t, h, hd)
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, t, d)
+    return _dense(out, blk["attn_out"])
+
+
+def apply(params, x: jax.Array, cfg: TinyConfig = TinyConfig()) -> jax.Array:
+    """x: (B, 28, 28, 1) -> logits (B, n_classes); compute in f32."""
+    tok = x.reshape(x.shape[0], cfg.n_tokens, cfg.d_in).astype(jnp.float32)
+    pos = jnp.take(params["pos_table"].astype(jnp.float32),
+                   params["pos_ids"], axis=0)            # int32 leaf lookup
+    h = _dense(tok, params["embed"]) + pos[None]
+    for blk in params["blocks"]:
+        h = h + _attention(_layernorm(h, blk["ln1"]), blk, cfg)
+        m = _dense(_layernorm(h, blk["ln2"]), blk["mlp_up"])
+        h = h + _dense(jax.nn.gelu(m), blk["mlp_dn"])
+    h = jnp.mean(_layernorm(h, params["ln_f"]), axis=1)  # pool tokens
+    return _dense(h, params["head"])
+
+
+def loss_fn(params, batch) -> jax.Array:
+    """Mean softmax cross-entropy on a {'x', 'y'} batch (f32)."""
+    logits = apply(params, batch["x"])
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, batch["y"][:, None].astype(jnp.int32),
+                               axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def accuracy(params, x, y) -> jax.Array:
+    return jnp.mean((jnp.argmax(apply(params, x), axis=-1) == y)
+                    .astype(jnp.float32))

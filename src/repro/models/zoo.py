@@ -1,0 +1,58 @@
+"""FL model zoo — the registry behind ``train.py --model``.
+
+The federation core is model-agnostic (it federates per-pytree-leaf, float
+leaves in native dtype, non-float leaves untouched — :mod:`repro.core.
+pytree`), so plugging a model into the FL loop needs exactly three
+callables.  :class:`FLModel` bundles them; the registry mirrors the
+strategy/backend/sketcher registries.
+
+  ``cnn``               — the paper's MNIST CNN (§IV.D), f32; the default,
+                          bit-for-bit the pre-zoo ``run_fl`` path.
+  ``transformer_tiny``  — bf16 row-token transformer with an int32
+                          ``pos_ids`` buffer leaf; exercises native-dtype
+                          federation and the non-float-leaf contract.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+from repro.models import cnn, tiny_transformer
+
+
+class FLModel(NamedTuple):
+    """What the FL driver needs from a model.
+
+    ``init(key) -> params`` (any pytree; float leaves are federated in their
+    native dtype, non-float leaves pass through), ``loss_fn(params, batch)``
+    on a ``{'x', 'y'}`` batch, ``accuracy(params, x, y)``.
+    """
+
+    name: str
+    init: Callable
+    loss_fn: Callable
+    accuracy: Callable
+
+
+_REGISTRY: dict[str, FLModel] = {}
+
+
+def register_model(model: FLModel) -> None:
+    _REGISTRY[model.name] = model
+
+
+def available_models() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def make_model(name: str) -> FLModel:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown model '{name}' "
+                         f"(registered: {', '.join(available_models())})")
+    return _REGISTRY[name]
+
+
+register_model(FLModel(name="cnn", init=cnn.init, loss_fn=cnn.loss_fn,
+                       accuracy=cnn.accuracy))
+register_model(FLModel(name="transformer_tiny", init=tiny_transformer.init,
+                       loss_fn=tiny_transformer.loss_fn,
+                       accuracy=tiny_transformer.accuracy))

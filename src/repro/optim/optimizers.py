@@ -19,8 +19,16 @@ class Optimizer(NamedTuple):
     update: Callable[..., tuple[PyTree, PyTree]]
 
 
+def _is_float0(g) -> bool:
+    """True for the zero-tangent leaves ``jax.grad(..., allow_int=True)``
+    emits for integer/bool params — optimizers must pass them through."""
+    return getattr(g, "dtype", None) == jax.dtypes.float0
+
+
 def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
-    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+    return jax.tree.map(
+        lambda p, u: p if _is_float0(u) else (p + u).astype(p.dtype),
+        params, updates)
 
 
 def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
@@ -37,13 +45,19 @@ def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
         step = state["step"]
         rate = lr(step) if callable(lr) else lr
         if momentum == 0.0:
-            upd = jax.tree.map(lambda g: -rate * g, grads)
+            upd = jax.tree.map(
+                lambda g: g if _is_float0(g) else -rate * g, grads)
             return upd, {"step": step + 1}
-        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        mu = jax.tree.map(
+            lambda m, g: m if _is_float0(g) else momentum * m + g,
+            state["mu"], grads)
         if nesterov:
-            upd = jax.tree.map(lambda m, g: -rate * (momentum * m + g), mu, grads)
+            upd = jax.tree.map(
+                lambda m, g: g if _is_float0(g) else -rate * (momentum * m + g),
+                mu, grads)
         else:
-            upd = jax.tree.map(lambda m: -rate * m, mu)
+            upd = jax.tree.map(
+                lambda m, g: g if _is_float0(g) else -rate * m, mu, grads)
         return upd, {"mu": mu, "step": step + 1}
 
     return Optimizer(init, update)
@@ -63,10 +77,14 @@ def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
     def update(grads, state, params=None):
         step = state["step"] + 1
         rate = lr(step) if callable(lr) else lr
-        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
-                         state["m"], grads)
-        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
-                         state["v"], grads)
+        m = jax.tree.map(
+            lambda m_, g: m_ if _is_float0(g)
+            else b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: v_ if _is_float0(g)
+            else b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
         bc1 = 1 - b1 ** step.astype(jnp.float32)
         bc2 = 1 - b2 ** step.astype(jnp.float32)
 
@@ -80,6 +98,8 @@ def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
             upd = jax.tree.map(lambda m_, v_: u(m_, v_, jnp.zeros(())), m, v)
         else:
             upd = jax.tree.map(u, m, v, params)
+        upd = jax.tree.map(lambda u_, g: g if _is_float0(g) else u_,
+                           upd, grads)
         return upd, {"m": m, "v": v, "step": step}
 
     return Optimizer(init, update)
@@ -94,9 +114,11 @@ def clip_by_global_norm(max_norm: float) -> Callable[[PyTree], PyTree]:
 
     def clip(grads):
         norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                            for g in jax.tree.leaves(grads)))
+                            for g in jax.tree.leaves(grads)
+                            if not _is_float0(g)))
         scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
-        return jax.tree.map(lambda g: g * scale, grads)
+        return jax.tree.map(lambda g: g if _is_float0(g) else g * scale,
+                            grads)
 
     return clip
 

@@ -289,3 +289,25 @@ class TestEventAccounting:
     def test_bytes_per_param_tracks_dtype(self):
         assert bytes_per_param(jnp.zeros((2, 3), jnp.float32)) == 4
         assert bytes_per_param(jnp.zeros((2, 3), jnp.bfloat16)) == 2
+
+    def test_wan_bytes_bill_native_dtype(self, lsq):
+        """A bf16 model is billed at its real wire size (pytree.tree_bytes
+        of the actual update = 2 bytes/param), not a hard-coded f32 rate —
+        the bf16-billed-as-f32 accounting bugfix."""
+        loss_fn, eval_fn, cd, params = lsq
+        p16 = {"w": params["w"].astype(jnp.bfloat16)}
+        cfg = _cfg(method="fedavg", rounds=6, fleet="cellular-flaky", seed=3)
+        _, h32 = _run(lsq, cfg, key=1)
+        fed = Federation(loss_fn, eval_fn, cfg)
+        _, h16 = fed.run(p16, cd, jax.random.key(1))
+        part16 = np.asarray(h16.trace.participation)
+        np.testing.assert_allclose(np.asarray(h16.trace.wan_bytes),
+                                   part16.sum(axis=1) * 2 * (DIM * 2),
+                                   rtol=1e-6)
+        # same fleet, same deliveries: the f32 run bills exactly 2x as much
+        # per delivery (4 vs 2 bytes/param)
+        part32 = np.asarray(h32.trace.participation)
+        np.testing.assert_allclose(
+            np.asarray(h32.trace.wan_bytes) / (part32.sum(axis=1) + 1e-9),
+            2 * np.asarray(h16.trace.wan_bytes) / (part16.sum(axis=1) + 1e-9),
+            rtol=1e-6)

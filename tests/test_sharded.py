@@ -115,6 +115,59 @@ def test_two_pass_invariant_under_shard_map():
         assert passes() == 2, backend
 
 
+# -- sketched rounds under shard_map -------------------------------------------
+
+def _sk(dim=64):
+    from repro.core import sketch
+    return sketch.make_sketcher("rproj", dim=dim)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_one_device_mesh_sketched_parity(backend):
+    """Sketched round on a 1-device mesh vs the dense sketched round: same
+    per-column sketch map, same assignment/medoids; floats to roundoff."""
+    mesh = mesh_lib.parse_mesh("data=1")
+    sb = sharded.sharded_backend(backend, mesh)
+    w = _clustered_w(d=520)
+    ci = jnp.array([0, 5, 10], jnp.int32)
+    dense = fz.fused_round(w, ci, backend=backend, sketcher=_sk())
+    shard = fz.fused_round(w, ci, backend=sb, sketcher=_sk())
+    assert jnp.array_equal(dense.assignment, shard.assignment)
+    assert jnp.array_equal(dense.counts, shard.counts)
+    assert jnp.array_equal(dense.new_center_idx, shard.new_center_idx)
+    np.testing.assert_allclose(dense.theta, shard.theta, rtol=1e-5, atol=1e-5)
+
+
+@need8
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_eight_device_sketched_parity(backend):
+    """Real D-sharding (520 = 8*65: no pad; offsets exercise the
+    global-column-index determinism of the sketch map)."""
+    mesh = mesh_lib.parse_mesh("data=8")
+    sb = sharded.sharded_backend(backend, mesh)
+    w = _clustered_w(d=520)
+    ci = jnp.array([0, 5, 10], jnp.int32)
+    dense = fz.fused_round(w, ci, backend=backend, sketcher=_sk())
+    shard = fz.fused_round(w, ci, backend=sb, sketcher=_sk())
+    assert jnp.array_equal(dense.assignment, shard.assignment)
+    np.testing.assert_allclose(dense.theta, shard.theta, rtol=2e-4, atol=1e-4)
+
+
+@need8
+def test_sketched_two_pass_invariant_under_shard_map():
+    """Each shard reads its W tile exactly twice in the sketched round too:
+    one partial-sketch sweep, one barycenter/theta sweep."""
+    mesh = mesh_lib.parse_mesh("data=8")
+    w = _w(n=8, d=800)
+    ci = jnp.array([0, 2], jnp.int32)
+    for backend in BACKENDS:
+        sb = sharded.sharded_backend(backend, mesh)
+        with instrument.count_w_passes() as passes:
+            jax.make_jaxpr(lambda w_: fz.fused_round(
+                w_, ci, backend=sb, sketcher=_sk()))(w)
+        assert passes() == 2, backend
+
+
 # -- hierarchical cohort sampling ---------------------------------------------
 
 def test_cohort_hierarchical_matches_flat():

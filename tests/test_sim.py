@@ -282,20 +282,28 @@ class TestMaskedStrategies:
 
         from repro.launch.train import _strategy_extras
 
-        ns = argparse.Namespace(method="fedavg", top_m=None, trim=2,
-                                client_weights=None, chunk=None)
+        def ns(**kw):
+            base = dict(method="fedavg", top_m=None, trim=None,
+                        client_weights=None, chunk=None,
+                        sketch="identity", sketch_dim=None)
+            base.update(kw)
+            return argparse.Namespace(**base)
+
         with pytest.raises(SystemExit, match="--trim applies only to"):
-            _strategy_extras(ns)
-        ns = argparse.Namespace(method="fedavg_trimmed", top_m=None, trim=2,
-                                client_weights=None, chunk=None)
-        assert _strategy_extras(ns) == {"trim": 2}
-        ns = argparse.Namespace(method="fedavg", top_m=None, trim=None,
-                                client_weights=None, chunk=4096)
+            _strategy_extras(ns(trim=2))
+        assert _strategy_extras(ns(method="fedavg_trimmed", trim=2)) \
+            == {"trim": 2}
         with pytest.raises(SystemExit, match="--chunk applies only to"):
-            _strategy_extras(ns)
-        ns = argparse.Namespace(method="coalition", top_m=None, trim=None,
-                                client_weights=None, chunk=4096)
-        assert _strategy_extras(ns) == {"chunk": 4096}
+            _strategy_extras(ns(chunk=4096))
+        assert _strategy_extras(ns(method="coalition", chunk=4096)) \
+            == {"chunk": 4096}
+        with pytest.raises(SystemExit, match="--sketch applies only to"):
+            _strategy_extras(ns(sketch="rproj"))
+        assert _strategy_extras(
+            ns(method="coalition", sketch="rproj", sketch_dim=64)) \
+            == {"sketch": "rproj", "sketch_dim": 64}
+        with pytest.raises(SystemExit, match="--sketch-dim requires"):
+            _strategy_extras(ns(method="coalition", sketch_dim=64))
 
     def test_flat_metrics_report_mass(self):
         s = strategies.make_strategy("fedavg", n_clients=5, n_coalitions=2)

@@ -1,0 +1,405 @@
+"""Sketched coalition geometry + the model-agnostic federation contract.
+
+Four layers, matching the PR's tentpole:
+
+  * pytree round-trip — mixed-dtype (f32 / bf16 / int32 / bool) pytrees
+    flatten and stack **bit-exactly**: float leaves in their promoted native
+    dtype, non-float leaves carried through untouched (the lossy
+    flatten/dtype bugfix regression);
+  * ragged client shards — ``client_update`` trains on every sample of an
+    ``n mod batch_size`` tail (n=15, bs=10) instead of dropping it, and the
+    divisible-shard program is unchanged;
+  * sketchers — seeded determinism, chunking/offset invariance of the map,
+    row-permutation equivariance, JL distance preservation at S=256;
+  * sketched rounds — exact-vs-sketched agreement on separated clusters for
+    every backend, identity bit-for-bit with the unsketched path, the
+    ≤2-full-sweep trace-time contract, and identity-sketch federation parity
+    across all four engines.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sim
+from repro.core import coalitions, fused as fz, instrument
+from repro.core import pytree, sketch, strategies
+from repro.core.client import ClientConfig, client_update
+from repro.core.server import Federation, FederationConfig
+
+BACKENDS = ("xla", "dot", "pallas")
+ENGINES = ("scan", "python", "semi_async", "event_driven")
+
+
+# -- pytree round-trip: the lossy flatten/dtype bugfix -------------------------------
+
+def _mixed_tree():
+    return {
+        "w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3) * 0.37,
+        "h": (jnp.arange(4, dtype=jnp.bfloat16) * jnp.bfloat16(0.1)),
+        "pos_ids": jnp.arange(5, dtype=jnp.int32),
+        "mask": jnp.array([True, False, True]),
+    }
+
+
+class TestMixedDtypeRoundTrip:
+    def test_flatten_unflatten_bit_exact(self):
+        t = _mixed_tree()
+        vec = pytree.flatten(t)
+        assert vec.dtype == jnp.float32          # bf16 ⊔ f32 promotes wide
+        assert vec.shape == (pytree.geometry_size(t),) == (10,)
+        back = pytree.unflatten(vec, t)
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_client_matrix_roundtrip_bit_exact(self):
+        single = _mixed_tree()
+        stacked = pytree.stack_clients(
+            [jax.tree.map(lambda l: l * (i + 1)
+                          if pytree.is_geometry_leaf(l) else l, single)
+             for i in range(3)])
+        mat = pytree.client_matrix(stacked)
+        assert mat.dtype == jnp.float32 and mat.shape == (3, 10)
+        back = pytree.matrix_to_stacked(mat, single)
+        for a, b in zip(jax.tree.leaves(stacked), jax.tree.leaves(back)):
+            assert a.dtype == b.dtype
+            if jnp.issubdtype(a.dtype, jnp.inexact):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # non-float leaves come from the template, identical on every client
+        np.testing.assert_array_equal(np.asarray(back["pos_ids"]),
+                                      np.asarray(stacked["pos_ids"]))
+
+    def test_pure_bf16_stays_bf16(self):
+        t = {"w": jnp.arange(4, dtype=jnp.bfloat16)}
+        assert pytree.flatten(t).dtype == jnp.bfloat16
+        assert pytree.geometry_dtype(t) == jnp.bfloat16
+
+    def test_geometry_excludes_int_leaves(self):
+        t = _mixed_tree()
+        assert pytree.geometry_size(t) == 10       # 6 + 4, not +5 +3
+        assert not pytree.is_geometry_leaf(t["pos_ids"])
+        assert pytree.is_geometry_leaf(t["h"])
+
+    def test_no_float_leaves_raises(self):
+        with pytest.raises(ValueError, match="no floating-point leaves"):
+            pytree.geometry_dtype({"i": jnp.arange(3)})
+
+    def test_tree_bytes_tracks_dtype(self):
+        assert pytree.tree_bytes({"w": jnp.zeros((8,), jnp.bfloat16)}) == 16
+        assert pytree.tree_bytes(_mixed_tree()) == 6 * 4 + 4 * 2 + 5 * 4 + 3
+
+
+# -- ragged tail: n mod bs samples train too -----------------------------------------
+
+def _lin_data(n, dim=4, seed=0):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    x = jax.random.normal(k1, (n, dim))
+    y = x @ jnp.arange(1.0, dim + 1.0) + 0.01 * jax.random.normal(k2, (n,))
+    return {"x": x, "y": y}
+
+
+def _lin_loss(params, batch):
+    return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+
+class TestRaggedTail:
+    CFG = ClientConfig(epochs=1, batch_size=10, lr=0.05)
+
+    def test_every_sample_matters_n15_bs10(self):
+        """Perturbing ANY of the 15 rows changes the update — the old
+        program dropped ``n mod bs`` rows, so 5 rows had zero influence."""
+        data = _lin_data(15)
+        p0 = {"w": jnp.zeros((4,))}
+        key = jax.random.key(3)
+        base, _ = client_update(_lin_loss, p0, data, key, self.CFG)
+        for i in range(15):
+            bumped = dict(data, y=data["y"].at[i].add(100.0))
+            moved, _ = client_update(_lin_loss, p0, bumped, key, self.CFG)
+            assert not np.allclose(np.asarray(base["w"]),
+                                   np.asarray(moved["w"])), f"row {i} ignored"
+
+    def test_tail_matches_manual_reference(self):
+        """One epoch, n=15, bs=10: full batch step then a masked tail step,
+        reproduced by hand from the same permutation."""
+        data = _lin_data(15)
+        p0 = {"w": jnp.zeros((4,))}
+        key = jax.random.key(5)
+        got, _ = client_update(_lin_loss, p0, data, key, self.CFG)
+
+        perm = jax.random.permutation(jax.random.split(key, 1)[0], 15)
+        take = lambda idx: jax.tree.map(lambda a: a[idx], data)
+        g1 = jax.grad(_lin_loss)(p0, take(perm[:10]))
+        p1 = {"w": p0["w"] - self.CFG.lr * g1["w"]}
+        g2 = jax.grad(_lin_loss)(p1, take(perm[10:]))
+        p2 = {"w": p1["w"] - self.CFG.lr * g2["w"]}
+        np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(p2["w"]),
+                                   rtol=1e-5)
+
+    def test_divisible_shard_unchanged(self):
+        """n % bs == 0 takes the exact pre-tail scan program."""
+        data = _lin_data(20)
+        p0 = {"w": jnp.zeros((4,))}
+        key = jax.random.key(7)
+        got, loss = client_update(_lin_loss, p0, data, key, self.CFG)
+
+        perm = jax.random.permutation(jax.random.split(key, 1)[0], 20)
+        take = lambda idx: jax.tree.map(lambda a: a[idx], data)
+        p = p0
+        for s in range(2):
+            g = jax.grad(_lin_loss)(p, take(perm[10 * s: 10 * s + 10]))
+            p = {"w": p["w"] - self.CFG.lr * g["w"]}
+        np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(p["w"]),
+                                   rtol=1e-6)
+        assert np.isfinite(float(loss))
+
+    def test_small_shard_below_batch_size(self):
+        """n < bs: zero full steps, one masked tail step over all n rows."""
+        data = _lin_data(4)
+        p0 = {"w": jnp.zeros((4,))}
+        got, loss = client_update(_lin_loss, p0, data, jax.random.key(1),
+                                  self.CFG)
+        assert np.isfinite(float(loss))
+        assert not np.allclose(np.asarray(got["w"]), 0.0)
+
+    def test_empty_shard_raises(self):
+        with pytest.raises(ValueError, match="empty"):
+            client_update(_lin_loss, {"w": jnp.zeros((4,))}, _lin_data(0),
+                          jax.random.key(0), self.CFG)
+
+
+# -- sketcher maps -------------------------------------------------------------------
+
+def _w(n=12, d=2048, seed=0):
+    return jax.random.normal(jax.random.key(seed), (n, d), jnp.float32)
+
+
+class TestSketchers:
+    @pytest.mark.parametrize("name", ["rproj", "countsketch"])
+    def test_seeded_determinism(self, name):
+        w = _w()
+        sk = sketch.make_sketcher(name, dim=64)
+        a = sketch.sketch_matrix(sk, w)
+        b = sketch.sketch_matrix(sketch.make_sketcher(name, dim=64), w)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        c = sketch.sketch_matrix(sketch.make_sketcher(name, dim=64, seed=1), w)
+        assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+    @pytest.mark.parametrize("name", ["rproj", "countsketch"])
+    def test_chunking_invariance(self, name):
+        """The per-column map is chunk-invariant; results agree to float
+        summation-order roundoff across different chunkings."""
+        w = _w()
+        sk = sketch.make_sketcher(name, dim=64)
+        full = sketch.sketch_block(sk, w, chunk=4096)       # single chunk
+        for chunk in (128, 512, 1000):                      # 1000 ∤ 2048: pad
+            np.testing.assert_allclose(
+                np.asarray(sketch.sketch_block(sk, w, chunk=chunk)),
+                np.asarray(full), rtol=2e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("name", ["rproj", "countsketch"])
+    def test_partial_offsets_sum_to_full(self, name):
+        """Column blocks sketched at their global offsets sum to the full
+        sketch — the psum identity the sharded round relies on."""
+        w = _w()
+        sk = sketch.make_sketcher(name, dim=64)
+        full = sketch.sketch_block(sk, w, chunk=4096)
+        parts = sum(sketch.sketch_block(sk, w[:, o: o + 512], col_offset=o,
+                                        chunk=4096)
+                    for o in range(0, 2048, 512))
+        np.testing.assert_allclose(np.asarray(parts), np.asarray(full),
+                                   rtol=2e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("name", ["rproj", "countsketch"])
+    def test_row_permutation_equivariance(self, name):
+        """The map acts row-wise: S(PW) == P S(W), bit-for-bit."""
+        w = _w()
+        sk = sketch.make_sketcher(name, dim=32)
+        perm = jax.random.permutation(jax.random.key(9), w.shape[0])
+        np.testing.assert_array_equal(
+            np.asarray(sketch.sketch_matrix(sk, w[perm])),
+            np.asarray(sketch.sketch_matrix(sk, w)[perm]))
+
+    def test_rproj_preserves_distances(self):
+        """JL: pairwise sq-dists survive S=256 to ~20% relative error."""
+        w = _w(n=8, d=4096, seed=3)
+        s = sketch.sketch_matrix(sketch.make_sketcher("rproj", dim=256), w)
+        d_full = np.asarray(jnp.sum(
+            (w[:, None] - w[None, :]) ** 2, axis=-1))
+        d_sk = np.asarray(jnp.sum((s[:, None] - s[None, :]) ** 2, axis=-1))
+        iu = np.triu_indices(8, k=1)
+        rel = np.abs(d_sk[iu] - d_full[iu]) / d_full[iu]
+        assert rel.max() < 0.35 and rel.mean() < 0.15
+
+    def test_identity_is_w(self):
+        w = _w()
+        sk = sketch.make_sketcher("identity")
+        assert sk.is_identity
+        assert sketch.sketch_matrix(sk, w) is w
+
+    def test_registry(self):
+        assert sketch.available_sketchers() == [
+            "countsketch", "identity", "rproj"]
+        with pytest.raises(ValueError, match="unknown sketch"):
+            sketch.make_sketcher("nope")
+
+
+# -- sketched coalition rounds -------------------------------------------------------
+
+def _clustered_w(n_per=8, d=1024, sep=8.0):
+    """3 well-separated clusters; one center seeded per cluster so exact and
+    sketched assignment agree deterministically."""
+    protos = jnp.array([[-1.0], [0.0], [1.0]]) * sep * jnp.ones((3, d))
+    noise = 0.5 * jax.random.normal(jax.random.key(2), (3 * n_per, d))
+    owner = jnp.repeat(jnp.arange(3), n_per)
+    w = protos[owner] + noise
+    state = coalitions.CoalitionState(
+        center_idx=jnp.array([0, n_per, 2 * n_per], jnp.int32),
+        round=jnp.int32(0))
+    return w, state
+
+
+class TestSketchedRound:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("name", ["rproj", "countsketch"])
+    def test_agreement_on_separated_clusters(self, backend, name):
+        w, state = _clustered_w()
+        exact = coalitions.run_round(w, state, backend=backend)
+        sk = sketch.make_sketcher(name, dim=256)
+        r = coalitions.run_round(w, state, backend=backend, sketcher=sk)
+        agree = float(jnp.mean(
+            (r.assignment == exact.assignment).astype(jnp.float32)))
+        assert agree >= 0.95, (backend, name, agree)
+        # the sketch-space medoid may be a different near-equidistant member
+        # of the same coalition; coalition identity must match
+        assert np.array_equal(
+            np.asarray(exact.assignment)[np.asarray(r.new_center_idx)],
+            np.asarray(exact.assignment)[np.asarray(exact.new_center_idx)])
+        np.testing.assert_allclose(np.asarray(r.theta),
+                                   np.asarray(exact.theta), rtol=1e-4)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_identity_bit_for_bit(self, backend):
+        w, state = _clustered_w(d=257)
+        plain = coalitions.run_round(w, state, backend=backend)
+        ident = coalitions.run_round(w, state, backend=backend,
+                                     sketcher=sketch.make_sketcher("identity"))
+        for a, b in zip(plain, ident):
+            if isinstance(a, coalitions.CoalitionState):
+                a, b = a.center_idx, b.center_idx
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_sketched_round_two_passes(self):
+        """Trace-time contract: a sketched round reads full W exactly twice
+        (sketch sweep + barycenter/θ sweep) on every backend; with a
+        precomputed sketch the fused round reads W exactly once."""
+        w, state = _clustered_w(d=70_001, n_per=4)
+        sk = sketch.make_sketcher("rproj", dim=64)
+        for backend in BACKENDS:
+            with instrument.count_w_passes() as passes:
+                jax.make_jaxpr(lambda w_, s: coalitions.run_round(
+                    w_, s, backend=backend, sketcher=sk).theta)(w, state)
+            assert passes() == 2, backend
+        s_w = sketch.sketch_matrix(sk, w)
+        with instrument.count_w_passes() as passes:
+            jax.make_jaxpr(lambda w_, sw: fz.sketched_fused_round(
+                fz.bk.get_backend("xla"), w_, sw,
+                state.center_idx).theta)(w, s_w)
+        assert passes() == 1
+
+    def test_sketch_forces_fused(self):
+        """The composed path dissolves under a sketch — fused=False with a
+        non-identity sketcher still runs the (2-pass) sketched round."""
+        w, state = _clustered_w(d=512)
+        sk = sketch.make_sketcher("countsketch", dim=128)
+        a = coalitions.run_round(w, state, sketcher=sk, fused=False)
+        b = coalitions.run_round(w, state, sketcher=sk, fused=True)
+        np.testing.assert_array_equal(np.asarray(a.theta), np.asarray(b.theta))
+
+
+# -- federation engines: identity parity + mixed-dtype end-to-end --------------------
+
+N_CLIENTS, N_LOCAL, DIM = 6, 20, 12
+
+
+def _lsq():
+    kx, kw, kt = jax.random.split(jax.random.key(0), 3)
+    x = jax.random.normal(kx, (N_CLIENTS, N_LOCAL, DIM))
+    w_true = jax.random.normal(kw, (DIM,))
+    y = x @ w_true + 0.1 * jax.random.normal(kt, (N_CLIENTS, N_LOCAL))
+
+    def loss_fn(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    eval_fn = lambda p: -jnp.mean((x[0] @ p["w"] - y[0]) ** 2)
+    return loss_fn, eval_fn, {"x": x, "y": y}, {"w": jnp.zeros((DIM,))}
+
+
+def _run_fed(sketch_name=None, engine="scan", backend="xla", params=None,
+             loss_fn=None, eval_fn=None, cd=None, sketch_dim=8):
+    if loss_fn is None:
+        loss_fn, eval_fn, cd, p0 = _lsq()
+        params = params if params is not None else p0
+    extras = {}
+    if sketch_name is not None:
+        extras = {"sketch": sketch_name, "sketch_dim": sketch_dim}
+    strategy = strategies.make_strategy(
+        "coalition", n_clients=N_CLIENTS, n_coalitions=2, backend=backend,
+        **extras)
+    cfg = FederationConfig(
+        n_clients=N_CLIENTS, n_coalitions=2, rounds=3, method="coalition",
+        client=ClientConfig(epochs=1, batch_size=10, lr=0.05),
+        backend=backend, engine=engine, sim=sim.SimConfig())
+    fed = Federation(loss_fn, eval_fn, cfg, strategy=strategy)
+    return fed.run(params, cd, jax.random.key(11))
+
+
+class TestSketchedFederation:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_identity_bit_for_bit_every_engine(self, engine):
+        base, hb = _run_fed(None, engine=engine)
+        ident, hi = _run_fed("identity", engine=engine)
+        np.testing.assert_array_equal(np.asarray(base["w"]),
+                                      np.asarray(ident["w"]))
+        np.testing.assert_array_equal(np.asarray(hb.test_acc),
+                                      np.asarray(hi.test_acc))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_identity_bit_for_bit_every_backend(self, backend):
+        base, _ = _run_fed(None, backend=backend)
+        ident, _ = _run_fed("identity", backend=backend)
+        np.testing.assert_array_equal(np.asarray(base["w"]),
+                                      np.asarray(ident["w"]))
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_rproj_trains_every_engine(self, engine):
+        params, hist = _run_fed("rproj", engine=engine)
+        assert np.isfinite(np.asarray(params["w"])).all()
+        assert np.isfinite(np.asarray(hist.train_loss)).all()
+
+    def test_mixed_dtype_federation_end_to_end(self):
+        """bf16 weights + f32 gain + int32 buffer leaf survive federated
+        rounds: native dtypes preserved, the int leaf bit-identical."""
+        loss0, eval0, cd, _ = _lsq()
+        params = {"w": jnp.zeros((DIM,), jnp.bfloat16),
+                  "gain": jnp.ones((), jnp.float32),
+                  "steps": jnp.int32(7)}
+
+        def loss_fn(p, batch):
+            pred = (batch["x"] @ p["w"].astype(jnp.float32)) * p["gain"]
+            return jnp.mean((pred - batch["y"]) ** 2)
+
+        strategy = strategies.make_strategy(
+            "coalition", n_clients=N_CLIENTS, n_coalitions=2,
+            sketch="rproj", sketch_dim=8)
+        cfg = FederationConfig(
+            n_clients=N_CLIENTS, n_coalitions=2, rounds=2, method="coalition",
+            client=ClientConfig(epochs=1, batch_size=10, lr=0.05),
+            engine="scan", sim=sim.SimConfig())
+        fed = Federation(loss_fn, lambda p: jnp.float32(0.0), cfg,
+                         strategy=strategy)
+        out, _ = fed.run(params, cd, jax.random.key(11))
+        assert out["w"].dtype == jnp.bfloat16
+        assert out["gain"].dtype == jnp.float32
+        assert out["steps"].dtype == jnp.int32 and int(out["steps"]) == 7
+        assert np.isfinite(np.asarray(out["w"], np.float32)).all()
