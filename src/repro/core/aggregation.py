@@ -5,6 +5,9 @@
                         n_k/n weighting degenerates to 1/N).
 ``trimmed_mean``      — coordinate-wise trimmed mean (robust-aggregation
                         family; used by the ``fedavg_trimmed`` strategy).
+``trimmed_mean_masked`` — the same rule under partial participation: order
+                        statistics run over the *present* rows only, so
+                        absent clients cannot occupy trim slots.
 ``coalition_round``   — the paper's proposed rule (mean of coalition
                         barycenters, Algorithm 1).
 ``CommModel``         — byte accounting for the paper's "communication-
@@ -80,6 +83,50 @@ def trimmed_mean(w: jax.Array, trim: int) -> jax.Array:
         return fedavg(w)
     ws = jnp.sort(w.astype(jnp.float32), axis=0)
     return jnp.mean(ws[trim:n - trim], axis=0)
+
+
+def trimmed_mean_masked(w: jax.Array, trim: int,
+                        mask: jax.Array) -> jax.Array:
+    """Trimmed mean over the *present* rows of a masked client matrix.
+
+    ``mask`` is the (N,) participation/staleness vector; a row participates
+    in the order statistics iff its mask is strictly positive (staleness
+    decay scales an update's aggregation mass, but an update is either
+    delivered or it is not — the trim budget is a robustness contract over
+    delivered rows, so presence is what it counts).
+
+    Trimming against the static row count ``N`` would let absent clients'
+    rows occupy trim slots — under partial participation each absent row
+    sorts to a deterministic end of every coordinate and silently eats the
+    budget meant for adversaries.  Instead the present rows are sorted to
+    the front (absent rows are replaced by ``+inf`` so they sort last and
+    are never kept), ``trim`` is clamped to what the *effective* row count
+    ``n_eff`` can afford (``2*t < n_eff``), and the mean runs over the
+    surviving window.  An all-present mask keeps every coordinate's window
+    identical to :func:`trimmed_mean`'s; an all-absent mask degrades to the
+    zero vector like :func:`fedavg_masked`.
+
+    The mask passes through an ``optimization_barrier`` before use: a
+    compile-time-constant mask (the scan engine's all-ones) would otherwise
+    constant-fold the masked reduction into a slice-sum whose reassociation
+    differs from the runtime-masked reduction the ``semi_async`` engine
+    traces — a 1-ULP drift that breaks the engines' bitwise-equality
+    contract.  The barrier pins one HLO reduction structure for every
+    caller.
+    """
+    n = w.shape[0]
+    if not 0 <= 2 * trim < n:
+        raise ValueError(f"trim={trim} must satisfy 0 <= 2*trim < n={n}")
+    mask = jax.lax.optimization_barrier(mask)
+    present = mask.astype(jnp.float32) > 0.0
+    ws = jnp.sort(jnp.where(present[:, None], w.astype(jnp.float32),
+                            jnp.inf), axis=0)
+    n_eff = jnp.sum(present.astype(jnp.int32))
+    t = jnp.minimum(jnp.int32(trim), jnp.maximum(n_eff - 1, 0) // 2)
+    pos = jnp.arange(n, dtype=jnp.int32)[:, None]
+    keep = (pos >= t) & (pos < n_eff - t)
+    denom = jnp.maximum(n_eff - 2 * t, 1).astype(jnp.float32)
+    return jnp.sum(jnp.where(keep, ws, 0.0), axis=0) / denom
 
 
 def coalition_round(w: jax.Array, state: co.CoalitionState, *,

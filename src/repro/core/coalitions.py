@@ -49,6 +49,7 @@ class CoalitionRound(NamedTuple):
     new_center_idx: jax.Array # (K,) int32 v_j^{r+1}
     theta: jax.Array          # (D,) float32 global model θ^{(r)}
     radius: jax.Array         # (K,) float32 RMS member->barycenter distance
+    med_d2: jax.Array         # (N, K) float32 client->barycenter sq dists
     state: CoalitionState
 
 
@@ -140,7 +141,7 @@ def run_round(w: jax.Array, state: CoalitionState, *,
         return CoalitionRound(
             assignment=r.assignment, barycenters=r.barycenters,
             counts=r.counts, new_center_idx=r.new_center_idx, theta=r.theta,
-            radius=r.radius,
+            radius=r.radius, med_d2=r.med_d2,
             state=CoalitionState(center_idx=r.new_center_idx,
                                  round=state.round + 1))
     assignment = assign(w, state.center_idx, backend=backend, chunk=chunk)
@@ -162,5 +163,6 @@ def run_round(w: jax.Array, state: CoalitionState, *,
         new_center_idx=new_centers,
         theta=theta,
         radius=radius,
+        med_d2=med_d2,
         state=CoalitionState(center_idx=new_centers, round=state.round + 1),
     )

@@ -74,6 +74,8 @@ class FusedRound(NamedTuple):
     new_center_idx: jax.Array # (K,) int32 medoid centers v_j^{r+1}
     theta: jax.Array          # (D,) float32
     radius: jax.Array         # (K,) float32 RMS member->barycenter distance
+    med_d2: jax.Array         # (N, K) float32 client->barycenter sq dists
+                              # (sketch-space under a sketcher, like radius)
 
 
 # --- sweep chunk size ------------------------------------------------------------
@@ -461,4 +463,4 @@ def fused_round(w: jax.Array, center_idx: jax.Array, *,
                                       center_idx.shape[0], client_weights)
     return FusedRound(assignment=s.assignment, barycenters=s.barycenters,
                       counts=s.counts, new_center_idx=new_center_idx,
-                      theta=s.theta, radius=radius)
+                      theta=s.theta, radius=radius, med_d2=s.med_d2)

@@ -32,8 +32,16 @@ def is_geometry_leaf(leaf) -> bool:
     Only floating-point (inexact) leaves are part of ω ∈ R^D; integer / bool
     buffers (position ids, step counters, masks) are carried through
     aggregation untouched rather than corrupted by a float round-trip.
+
+    Abstract leaves (``jax.ShapeDtypeStruct``, tracers) already carry a
+    dtype and must not be materialized, so the dtype attribute is preferred
+    over ``jnp.asarray`` — which lets shape-only pipelines (``jax.eval_shape``
+    dry runs) reuse the same geometry predicate.
     """
-    return jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact)
+    dt = getattr(leaf, "dtype", None)
+    if dt is None:
+        dt = jnp.asarray(leaf).dtype
+    return jnp.issubdtype(dt, jnp.inexact)
 
 
 def geometry_dtype(tree: PyTree):

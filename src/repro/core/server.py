@@ -101,6 +101,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -110,10 +111,12 @@ import numpy as np
 from repro import sim as sim_mod
 from repro.core import backends as bk
 from repro.core import pytree, strategies
-from repro.core.client import ClientConfig, client_update
+from repro.core.client import (ClientConfig, client_update, dp_enabled,
+                               validate_dp)
 from repro.core.strategies import RoundMetrics, RoundResult, Strategy
 from repro.obs import ledger as obs_ledger
 from repro.obs import metrics as obs_metrics
+from repro.obs import privacy as obs_privacy
 
 PyTree = Any
 
@@ -151,6 +154,19 @@ class FederationConfig(NamedTuple):
     #: over; None = single-device dense round.  Validated eagerly at
     #: construction like engine/backend/fleet.
     mesh: str | None = None
+    #: registered byzantine attack name (:mod:`repro.sim.attacks`); None =
+    #: every client honest (the pre-attack program, verbatim).  Hyper-
+    #: parameterized attacks go through the ``attack=`` argument of
+    #: :class:`Federation` (mirroring ``strategy=``).
+    attack: str | None = None
+    #: fraction of the fleet compromised (mask drawn once per fleet,
+    #: deterministic in ``sim.seed``); 0.0 with an attack set traces the
+    #: attack hooks but gates them all off — bit-for-bit the clean run.
+    adv_frac: float = 0.0
+    #: rank coupling of adversary placement to device capability
+    #: (:func:`repro.sim.attacks.adversary_mask`): +1 = the strongest
+    #: devices are compromised, -1 = the weakest, 0 = seeded-random.
+    rho_adv: float = 0.0
 
 
 class Trace(NamedTuple):
@@ -188,6 +204,14 @@ class Trace(NamedTuple):
     #                                            (cannot afford another cycle)
     # --- cohort mode only ----------------------------------------------------
     cohort: jax.Array | None = None            # (R, C) sampled device ids
+    # --- attack runs only (FederationConfig.attack set) ----------------------
+    adversary: jax.Array | None = None      # (R, N) 0/1 compromised-row mask
+    quarantine: jax.Array | None = None     # (R,) frac. adversaries embedded
+    #                                         among honest clients (0 = fully
+    #                                         quarantined)
+    contamination: jax.Array | None = None  # (R,) honest-barycenter
+    #                                         contamination bound (0 for flat
+    #                                         rules / pure coalitions)
 
 
 @dataclasses.dataclass
@@ -295,6 +319,23 @@ class History:
             return None
         return np.asarray(self.trace.cohort).astype(int).tolist()
 
+    @property
+    def adversary(self) -> list[list[int]] | None:
+        """Per-round 0/1 compromised-row mask (attack runs only)."""
+        if self.trace.adversary is None:
+            return None
+        return np.asarray(self.trace.adversary).astype(int).tolist()
+
+    @property
+    def quarantine(self) -> list[float] | None:
+        """Per-round fraction of adversaries embedded among honest clients."""
+        return self._float_list(self.trace.quarantine)
+
+    @property
+    def contamination(self) -> list[float] | None:
+        """Per-round honest-barycenter contamination bound."""
+        return self._float_list(self.trace.contamination)
+
 
 # -- engine scan carries --------------------------------------------------------
 # One NamedTuple per engine: the full state a chunk boundary hands back to
@@ -390,6 +431,9 @@ class Federation:
         eagerly here — a typo fails at construction with the registered
         options listed, not deep inside dispatch.
       strategy: optional pre-built :class:`Strategy` (overrides cfg.method).
+      attack: optional pre-built :class:`repro.sim.Attack` (overrides
+        cfg.attack — the way to set attack hyper-parameters like
+        ``scale_update``'s boost).
     """
 
     _ENGINES = ("event_driven", "python", "scan", "semi_async")
@@ -397,7 +441,8 @@ class Federation:
     def __init__(self, loss_fn: Callable[[PyTree, PyTree], jax.Array],
                  eval_fn: Callable[[PyTree], jax.Array],
                  cfg: FederationConfig,
-                 strategy: Strategy | None = None):
+                 strategy: Strategy | None = None,
+                 attack: sim_mod.Attack | None = None):
         if cfg.engine not in self._ENGINES:
             raise ValueError(
                 f"unknown engine {cfg.engine!r}; registered engines: "
@@ -444,6 +489,25 @@ class Federation:
                     "cohort mode requires the 'independent' scenario with "
                     "rho=0 — coupled scenarios partition data jointly with "
                     "a dense fleet")
+        # Attack / DP config is validated here, before any data loads or
+        # programs trace — same eager contract as engine/backend/fleet.
+        if not 0.0 <= cfg.adv_frac < 1.0:       # also rejects NaN
+            raise ValueError(
+                f"adv_frac={cfg.adv_frac} must be in [0, 1) (a fully "
+                "compromised federation has no honest signal to aggregate)")
+        if not -1.0 <= cfg.rho_adv <= 1.0:      # also rejects NaN
+            raise ValueError(
+                f"rho_adv={cfg.rho_adv} must be in [-1, 1] (adversary-"
+                "capability rank coupling; 0 = random placement)")
+        self._attack = attack
+        if self._attack is None and cfg.attack is not None:
+            self._attack = sim_mod.make_attack(cfg.attack)   # raises on typo
+        if cfg.adv_frac > 0.0 and self._attack is None:
+            raise ValueError(
+                f"adv_frac={cfg.adv_frac} > 0 requires an attack "
+                f"(cfg.attack or the attack= argument); available: "
+                f"{sim_mod.available_attacks()}")
+        validate_dp(cfg.client)
         self.loss_fn = loss_fn
         self.eval_fn = eval_fn
         self.cfg = cfg
@@ -469,8 +533,58 @@ class Federation:
         #: cohort?) — a plain run compiles exactly one; a snapshot cadence
         #: adds at most one more (the remainder chunk)
         self._chunk_progs: dict[tuple[str, int, bool], Callable] = {}
+        if self._attack is not None:
+            # Materialize the fleet + adversary mask eagerly (host-side
+            # numpy), never inside a traced round program — the scan
+            # engines would otherwise sample the fleet under a tracer.
+            self._adversaries  # noqa: B018 — cached-property side effect
 
     # -- shared round pieces -----------------------------------------------------
+
+    @functools.cached_property
+    def _adversaries(self) -> jax.Array:
+        """(N,) float32 0/1 compromised-device mask over the fleet.
+
+        Deterministic in ``(fleet, adv_frac, rho_adv, sim.seed)`` — like
+        ``_fleet`` itself and *not* the run key — so the memoized chunk
+        programs that close over it stay valid across runs.
+        """
+        mask = sim_mod.adversary_mask(self._fleet, self.cfg.adv_frac,
+                                      self.cfg.rho_adv,
+                                      seed=self.cfg.sim.seed)
+        return jnp.asarray(mask, jnp.float32)
+
+    def _adv_row(self, ids=None) -> jax.Array | None:
+        """The round's (C,) adversary mask, or None when no attack is set.
+
+        Dense mode uses the fleet mask directly; cohort mode gathers the
+        sampled device rows (compromise follows the *device*, so the same
+        fleet member is adversarial in every cohort that seats it).
+        """
+        if self._attack is None:
+            return None
+        adv = self._adversaries
+        return adv if ids is None else adv[ids]
+
+    def _attack_row(self, res: RoundResult, adv: jax.Array | None) -> dict:
+        """The attack block of one round's trace row (empty when clean).
+
+        Quarantine and contamination are O(N·K) algebra over the assignment
+        and the ``med_d2`` matrix the coalition round already materialized —
+        no W sweep, so the fused path's trace-time pass count stays 2.  Flat
+        rules have no barycenter geometry: their contamination reports 0.0
+        (their quarantine is still truthful — everyone shares group 0).
+        """
+        if adv is None:
+            return {}
+        k = self.strategy.n_groups
+        q = obs_metrics.quarantine_fraction(res.metrics.assignment, adv, k)
+        if res.metrics.med_d2 is not None:
+            c = obs_metrics.contamination(res.metrics.med_d2,
+                                          res.metrics.assignment, adv, k)
+        else:
+            c = jnp.float32(0.0)
+        return {"adversary": adv, "quarantine": q, "contamination": c}
 
     def _local_phase(self, global_params, client_data, key, ids=None):
         """Broadcast + vmapped ClientUpdate -> ((C, D) weights, (C,) losses).
@@ -480,16 +594,32 @@ class Federation:
         ``i mod S`` where S is ``client_data``'s leading dim, so the data
         pytree stays S-sized however large the registered fleet is.  Dense
         mode (``ids=None``) compiles the identical pre-cohort program.
+
+        With an attack configured, the round's adversary rows poison their
+        gathered batch before training and transform their reported update
+        after it (:mod:`repro.sim.attacks`); both hooks gate through the 0/1
+        mask with ``jnp.where``, so a zero-adversary mask leaves every bit
+        of the clean round intact.  Attack noise draws from the
+        ``ATTACK_STREAM`` fold of the round key — the client-update chain is
+        untouched.
         """
         if ids is not None:
             client_data = jax.tree.map(lambda a: a[ids % a.shape[0]],
                                        client_data)
+        adv = self._adv_row(ids)
+        if adv is not None:
+            client_data = self._attack.poison(client_data, adv)
         ckeys = jax.random.split(key, self.cfg.n_clients)
         new_params, losses = jax.vmap(
             lambda d, k: client_update(self.loss_fn, global_params, d, k,
                                        self.cfg.client)
         )(client_data, ckeys)
-        return pytree.client_matrix(new_params), losses
+        w = pytree.client_matrix(new_params)
+        if adv is not None:
+            akey = jax.random.fold_in(key, sim_mod.ATTACK_STREAM)
+            theta = pytree.flatten(global_params)
+            w = self._attack.transform(w, theta, adv, akey)
+        return w, losses
 
     def _bary_of(self, res: RoundResult) -> jax.Array:
         """The (n_groups, D) per-group models this round produced.
@@ -549,6 +679,7 @@ class Federation:
               "drift": jnp.zeros((self.strategy.n_groups,), jnp.float32)}
         if ids is not None:
             y0["cohort"] = ids
+        y0.update(self._attack_row(res, self._adv_row(ids)))
         return key, gp, res.state, self._bary_of(res), w0, y0
 
     @functools.cached_property
@@ -682,6 +813,7 @@ class Federation:
                                       bary)}
             if ids is not None:
                 y["cohort"] = ids
+            y.update(self._attack_row(res, self._adv_row(ids)))
             return _ScanCarry(key, gp, res.state, bary,
                               res.metrics.assignment), y
 
@@ -738,6 +870,7 @@ class Federation:
                                       bary),
                  "sim_time": sim_t, "wan_bytes": wan, "edge_bytes": edge,
                  "participation": m}
+            y.update(self._attack_row(res, self._adv_row()))
             return _SemiAsyncCarry(key, gp, res.state, bary,
                                    res.metrics.assignment, buf, tau,
                                    astate), y
@@ -819,6 +952,7 @@ class Federation:
                  "event_time": t_now, "energy_spent": spent,
                  "energy_exhausted": jnp.logical_not(alive).astype(
                      jnp.float32)}
+            y.update(self._attack_row(res, self._adv_row()))
             return _EventCarry(key, gp, res.state, bary,
                                res.metrics.assignment, buf, last_t, energy,
                                spent, next_t, t_now, astate), y
@@ -896,6 +1030,20 @@ class Federation:
                "steps": self._n_steps(name) + 1}
         if cfg.fleet_size is not None:
             rec["fleet_size"] = cfg.fleet_size
+        if self._attack is not None:
+            rec.update(
+                attack=self._attack.name, attack_params=self._attack.params,
+                adv_frac=cfg.adv_frac, rho_adv=cfg.rho_adv,
+                n_adversaries=int(np.asarray(self._adversaries).sum()))
+        if dp_enabled(cfg.client):
+            eps = obs_privacy.gaussian_epsilon(cfg.client.dp_sigma,
+                                               self._n_steps(name) + 1)
+            rec.update(
+                dp_sigma=cfg.client.dp_sigma,
+                # null = unconstrained (inf is not valid RFC 8259 JSON)
+                dp_clip=(cfg.client.dp_clip
+                         if math.isfinite(cfg.client.dp_clip) else None),
+                dp_epsilon=eps if math.isfinite(eps) else None)
         if hasattr(carry, "buf"):
             model_bytes = pytree.tree_bytes(carry.gp)
             rec.update(

@@ -76,6 +76,11 @@ class RoundMetrics(NamedTuple):
     assignment: jax.Array   # (N,) int32 group id per client (0 if ungrouped)
     counts: jax.Array       # (n_groups,) float32 group sizes / masses
     radius: jax.Array | None = None   # (n_groups,) float32 intra radius
+    #: (N, n_groups) client->barycenter squared distances the coalition round
+    #: already materialized for the medoid election — the engine's quarantine
+    #: contamination bound reads it without any extra W sweep; flat rules
+    #: report None (they have no barycenter geometry).
+    med_d2: jax.Array | None = None
 
 
 class RoundResult(NamedTuple):
@@ -221,12 +226,16 @@ class TrimmedFedAvgStrategy(Strategy):
         return jnp.int32(0)
 
     def round(self, w, state, mask=None):
-        # The trim budget is the robustness contract; under partial
-        # participation the mask reaches only the metrics — staleness enters
-        # through the buffered rows of ``w`` themselves, and a stale update
-        # that drifts far from the cohort is exactly what the coordinate-wise
-        # trim is built to discard.
-        theta = aggregation.trimmed_mean(w, self.trim)
+        # The trim budget is a robustness contract over *delivered* rows:
+        # under partial participation the order statistics must run over the
+        # effective participants, or absent clients' rows occupy trim slots
+        # and silently shield adversaries.  mask=None routes through the
+        # same masked codegen with an explicit all-ones mask so every engine
+        # traces one program (scan == semi_async stays bitwise on the ideal
+        # fleet).
+        if mask is None:
+            mask = jnp.ones((self.n_clients,), jnp.float32)
+        theta = aggregation.trimmed_mean_masked(w, self.trim, mask)
         return RoundResult(theta=theta, state=state + 1,
                            metrics=self._flat_metrics(mask))
 
@@ -279,7 +288,8 @@ class CoalitionStrategy(Strategy):
         return RoundResult(theta=r.theta, state=r.state,
                            metrics=RoundMetrics(assignment=r.assignment,
                                                 counts=r.counts,
-                                                radius=r.radius),
+                                                radius=r.radius,
+                                                med_d2=r.med_d2),
                            barycenters=r.barycenters)
 
 
@@ -304,7 +314,8 @@ class TopKCoalitionStrategy(CoalitionStrategy):
         return RoundResult(theta=theta, state=r.state,
                            metrics=RoundMetrics(assignment=r.assignment,
                                                 counts=r.counts,
-                                                radius=r.radius),
+                                                radius=r.radius,
+                                                med_d2=r.med_d2),
                            barycenters=r.barycenters)
 
 

@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core import sketch as sketch_mod
 from repro.core import strategies
+from repro.sim import attacks as sim_reg
 from repro.data import partition
 from repro.models import zoo as zoo_mod
 
@@ -67,6 +68,11 @@ _EXTRA_CONSUMERS = {
     "sketch": ("coalition", "coalition_topk"),
     "sketch_dim": ("coalition", "coalition_topk"),
 }
+
+
+def _finite(v: float, ndigits: int) -> float | None:
+    """Round for JSON, mapping non-finite values to null (RFC 8259)."""
+    return round(float(v), ndigits) if np.isfinite(v) else None
 
 
 def _strategy_extras(args) -> dict:
@@ -146,8 +152,10 @@ def run_fl(args) -> dict:
         n_clients=args.clients, n_coalitions=args.coalitions,
         rounds=args.rounds, method=args.method,
         client=ClientConfig(epochs=args.local_epochs,
-                            batch_size=args.batch_size, lr=args.lr),
+                            batch_size=args.batch_size, lr=args.lr,
+                            dp_clip=args.dp_clip, dp_sigma=args.dp_sigma),
         backend=args.backend, engine=args.engine,
+        attack=args.attack, adv_frac=args.adv_frac, rho_adv=args.rho_adv,
         fleet_size=args.fleet_size, mesh=args.mesh,
         sim=sim.SimConfig(fleet=args.fleet, participation=args.participation,
                           staleness_alpha=args.staleness,
@@ -251,6 +259,24 @@ def run_fl(args) -> dict:
             "edge_MB": round(sum(hist.edge_bytes) / 1e6, 3),
             "mean_participation": round(
                 float(np.mean(hist.participation)), 3)})
+    if hist.quarantine is not None:     # the byzantine-attack block
+        out.update({
+            "attack": args.attack,
+            "adv_frac": args.adv_frac,
+            "rho_adv": args.rho_adv,
+            "n_adversaries": int(np.asarray(hist.adversary[-1]).sum()),
+            # null = diverged run (NaN is not valid RFC 8259 JSON)
+            "final_quarantine": _finite(hist.quarantine[-1], 4),
+            "final_contamination": _finite(hist.contamination[-1], 6)})
+    if args.dp_sigma > 0.0 or np.isfinite(args.dp_clip):   # the DP block
+        from repro.obs import privacy
+
+        eps = privacy.gaussian_epsilon(args.dp_sigma, args.rounds)
+        out.update({
+            "dp_sigma": args.dp_sigma,
+            # null = unconstrained (inf is not valid RFC 8259 JSON)
+            "dp_clip": args.dp_clip if np.isfinite(args.dp_clip) else None,
+            "dp_epsilon": round(eps, 4) if np.isfinite(eps) else None})
     if hist.event_times is not None:    # the event_driven energy ledger
         dead = np.asarray(hist.energy_exhausted)
         out.update({
@@ -426,6 +452,28 @@ def build_parser() -> argparse.ArgumentParser:
                     help="capture a jax.profiler trace of the run here "
                          "(real hardware time, vs. the simulated-time "
                          "--trace-out)")
+    # fl: adversarial & privacy tier (repro.sim.attacks + DP client path)
+    ap.add_argument("--attack", default=None,
+                    choices=sorted(sim_reg.available_attacks()),
+                    help="byzantine attack applied to the compromised "
+                         "fraction of clients (repro.sim.attacks); absent = "
+                         "every client honest")
+    ap.add_argument("--adv-frac", type=float, default=0.0,
+                    help="fraction of the fleet compromised, in [0, 1); "
+                         "0 with --attack traces the hooks but gates them "
+                         "off (bit-for-bit the clean run)")
+    ap.add_argument("--rho-adv", type=float, default=0.0,
+                    help="adversary placement rank coupling in [-1, 1]: "
+                         "+1 compromises the strongest devices, -1 the "
+                         "weakest, 0 seeded-random")
+    ap.add_argument("--dp-clip", type=float, default=float("inf"),
+                    help="per-client L2 clip norm on the local update "
+                         "delta (inf = no clipping)")
+    ap.add_argument("--dp-sigma", type=float, default=0.0,
+                    help="Gaussian noise multiplier of the DP client path "
+                         "(noise std = dp_sigma * dp_clip); the composed "
+                         "moments-accountant epsilon lands in the output "
+                         "JSON and the run ledger")
     # fl: joint fleet+data scenarios (repro.sim.scenarios)
     ap.add_argument("--scenario", default="independent",
                     help="joint fleet+data scenario (see "

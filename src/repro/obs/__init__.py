@@ -13,6 +13,8 @@ Three parts, one subsystem:
   :mod:`repro.obs.timeline`  — simulated-time Chrome trace-event export
                                (Perfetto): device tracks, coalition tracks,
                                telemetry counters.
+  :mod:`repro.obs.privacy`   — moments-accountant epsilon for the DP client
+                               path (pure NumPy, never in the jitted round).
 
 ``repro.core`` imports :mod:`repro.obs.metrics`; nothing in this package
 imports ``repro.core`` back.
@@ -35,7 +37,10 @@ from repro.obs.ledger import (  # noqa: F401
 )
 from repro.obs.metrics import (  # noqa: F401
     barycenter_drift,
+    contamination,
     intra_radius,
     membership_churn,
+    quarantine_fraction,
     size_entropy,
 )
+from repro.obs.privacy import gaussian_epsilon  # noqa: F401

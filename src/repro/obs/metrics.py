@@ -19,6 +19,16 @@ observables:
                                in weight space).
   :func:`barycenter_drift`   — per-coalition ‖b_k(r) − b_k(r−1)‖ (how far
                                each coalition's model moved this round).
+  :func:`quarantine_fraction` — under a byzantine adversary mask, the
+                               fraction of adversaries sharing a coalition
+                               with ≥ 1 honest client (0.0 = perfect
+                               quarantine: every attacker isolated among
+                               attackers).
+  :func:`contamination`      — honest-mass-weighted upper bound on how far
+                               adversaries displaced the barycenters of the
+                               coalitions honest clients sit in, from the
+                               same ``med_d2`` matrix the medoid election
+                               already materialized.
 
 Every function is jittable and shape-static so the engines compute them
 *inside* the scanned round program, and none of them touches the (N, D)
@@ -96,3 +106,63 @@ def barycenter_drift(bary: jax.Array, prev_bary: jax.Array) -> jax.Array:
     """
     diff = bary.astype(jnp.float32) - prev_bary.astype(jnp.float32)
     return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=1), 0.0))
+
+
+def _membership(assignment: jax.Array, adversary: jax.Array,
+                k: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-coalition (member, adversary-mass, honest-mass) from the mask."""
+    member = (assignment[:, None] == jnp.arange(k, dtype=assignment.dtype)
+              [None, :]).astype(jnp.float32)                       # (N, K)
+    adv = jnp.clip(adversary.astype(jnp.float32), 0.0, 1.0)        # (N,)
+    a_mass = jnp.sum(member * adv[:, None], axis=0)                # (K,)
+    h_mass = jnp.sum(member * (1.0 - adv)[:, None], axis=0)        # (K,)
+    return member, a_mass, h_mass
+
+
+def quarantine_fraction(assignment: jax.Array, adversary: jax.Array,
+                        k: int) -> jax.Array:
+    """Fraction of adversaries sharing a coalition with ≥ 1 honest client.
+
+    ``adversary`` is the (N,) 0/1 byzantine mask the engine carries in the
+    trace.  0.0 means perfect quarantine — every compromised client landed
+    in an attackers-only coalition, so no honest barycenter averaged over a
+    poisoned update.  1.0 means every attacker is embedded among honest
+    clients.  Reports 0.0 when there are no adversaries (vacuous
+    quarantine) and, for flat rules (k = 1, everyone in group 0), exactly
+    the indicator that both populations are non-empty.
+    """
+    _, a_mass, h_mass = _membership(assignment, adversary, k)
+    embedded = jnp.sum(a_mass * (h_mass > 0))
+    total = jnp.sum(a_mass)
+    return jnp.where(total > 0, embedded / jnp.maximum(total, _EPS), 0.0)
+
+
+def contamination(med_d2: jax.Array, assignment: jax.Array,
+                  adversary: jax.Array, k: int) -> jax.Array:
+    """Honest-mass-weighted bound on adversary-induced barycenter shift.
+
+    For a mixed coalition *j* with adversary mass ``a_j`` and honest mass
+    ``h_j``, the contaminated barycenter decomposes as
+    ``b_j = (h_j b_j^h + a_j b_j^a) / (h_j + a_j)``, so the displacement of
+    the honest clients' model satisfies
+
+        ‖b_j − b_j^h‖ = (a_j / h_j) ‖b_j^a − b_j‖
+                      ≤ (a_j / h_j) · RMS_{i adversarial in j} ‖w_i − b_j‖
+
+    (Jensen on the adversary sub-barycenter).  The RMS term is read straight
+    off column *j* of the (N, K) ``med_d2`` matrix the medoid election
+    already materialized — zero extra W sweeps.  The returned scalar is the
+    honest-mass-weighted mean of the per-coalition bounds: 0.0 exactly when
+    every coalition is pure (perfect quarantine or no attack), growing with
+    both embedded adversary mass and how far the attackers sit from the
+    coalitions they poison.
+    """
+    member, a_mass, h_mass = _membership(assignment, adversary, k)
+    adv = jnp.clip(adversary.astype(jnp.float32), 0.0, 1.0)
+    adv_d2 = jnp.sum(member * adv[:, None] * jnp.maximum(med_d2, 0.0),
+                     axis=0)                                       # (K,)
+    rms = jnp.sqrt(adv_d2 / jnp.maximum(a_mass, _EPS))
+    mixed = (a_mass > 0) & (h_mass > 0)
+    bound = jnp.where(mixed, (a_mass / jnp.maximum(h_mass, _EPS)) * rms, 0.0)
+    h_total = jnp.sum(h_mass)
+    return jnp.sum(bound * h_mass) / jnp.maximum(h_total, _EPS)

@@ -52,6 +52,9 @@ participation — devices that can no longer afford a full cycle retire.
 On the ``ideal`` profile with an unbounded budget it, too, reproduces
 ``scan`` bit-for-bit.
 """
+from repro.sim.attacks import (ATTACK_STREAM, Attack, adversary_mask,
+                               available_attacks, make_attack,
+                               register_attack)
 from repro.sim.availability import (AVAILABILITY_STREAM, AvailabilityState,
                                     effective_p, init_availability,
                                     sample_mask)
@@ -66,12 +69,16 @@ from repro.sim.scenarios import (Scenario, available_scenarios,
                                  register_scenario)
 
 __all__ = [
+    "ATTACK_STREAM",
     "AVAILABILITY_STREAM",
     "COHORT_STREAM",
+    "Attack",
     "AvailabilityState",
     "DeviceFleet",
     "Scenario",
     "SimConfig",
+    "adversary_mask",
+    "available_attacks",
     "available_fleets",
     "available_scenarios",
     "capability_rank",
@@ -80,9 +87,11 @@ __all__ = [
     "effective_p",
     "init_availability",
     "label_skew_rank",
+    "make_attack",
     "make_fleet",
     "make_scenario",
     "quantity_rank",
+    "register_attack",
     "register_fleet",
     "register_scenario",
     "round_stats",

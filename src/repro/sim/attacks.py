@@ -1,0 +1,232 @@
+"""Byzantine attack registry — jit-safe client-update corruption.
+
+The paper clusters devices by Euclidean weight distance, which raises a
+question it never tests: do byzantine clients get *quarantined* into their
+own coalition, or do they poison the barycenters of honest ones?  This
+module supplies the hostile half of that experiment: a registry of attack
+models that corrupt a masked subset of clients, composed with every
+engine/strategy/backend unchanged.
+
+An :class:`Attack` is two pure hooks, both traced into the engines' jitted
+round programs:
+
+  ``poison(data, adversary)``
+      Data poisoning, applied to the (gathered) client batch pytree
+      *before* local training.  ``adversary`` is a float32 ``(N,)`` 0/1
+      mask over the participating rows.  Only ``label_flip`` is non-trivial
+      here; the hook must be the bitwise identity wherever
+      ``adversary == 0``.
+
+  ``transform(w, theta, adversary, key)``
+      Model poisoning, applied to the ``(N, D)`` flattened client-update
+      matrix *after* local training and before aggregation.  ``theta`` is
+      the ``(D,)`` global weights the round started from (model-replacement
+      attacks are expressed relative to it), ``key`` a PRNG key on the
+      dedicated :data:`ATTACK_STREAM` fork of the round key.  Again: bitwise
+      identity wherever ``adversary == 0``.
+
+Both hooks gate through ``jnp.where(adversary, attacked, clean)``, so a
+zero-adversary configuration traces the *same program* as a clean run and
+produces bit-for-bit identical federations — the differential test the
+suite in ``tests/test_attacks.py`` pins on all four engines.
+
+Built-ins:
+
+  ``label_flip``       — adversaries train on flipped labels
+                         (``n_classes-1-y`` for integer labels, ``-y`` for
+                         regression targets); the update itself is honest
+                         SGD on dishonest data.
+  ``scale_update``     — model-replacement boosting (Bagdasaryan et al.):
+                         the adversary ships ``theta + boost * (w - theta)``,
+                         amplifying its displacement so the post-averaging
+                         global model moves as if the adversary were
+                         ``boost`` clients.
+  ``sign_flip``        — ships the reflection ``2*theta - w``: exactly
+                         cancels an equal-mass honest update.
+  ``gaussian_noise``   — ships ``w + sigma * N(0, I)`` in the update's
+                         native dtype; an unstructured availability attack.
+
+Adversary *placement* reuses the scenario registry's rank machinery
+(:func:`repro.sim.scenarios.capability_rank`): :func:`adversary_mask`
+couples which devices are compromised to their fleet position via
+``rho_adv`` — attackers on the strong, always-on devices (``rho_adv > 0``)
+are a genuinely different regime from attackers on the flaky edge
+(``rho_adv < 0``), because deadline/energy censoring silently removes the
+latter from many rounds.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sim.devices import DeviceFleet
+from repro.sim.scenarios import _ranks, capability_rank
+
+# PRNG stream tag for attack noise: forked off the round key with fold_in,
+# leaving the client-update and availability key chains untouched (same
+# pattern as AVAILABILITY_STREAM / COHORT_STREAM).
+ATTACK_STREAM = 0xA77C
+
+
+class Attack(NamedTuple):
+    """One registered attack model: a (poison, transform) hook pair."""
+
+    name: str
+    poison: Callable[[Any, jax.Array], Any]
+    transform: Callable[[jax.Array, jax.Array, jax.Array, jax.Array],
+                        jax.Array]
+    params: dict
+
+
+_ATTACKS: dict[str, Callable[..., Attack]] = {}
+
+
+def register_attack(name: str) -> Callable:
+    """Decorator: register an attack factory under ``name``.
+
+    The factory takes keyword hyper-parameters and returns an
+    :class:`Attack` whose hooks are pure, jit-safe functions.
+    """
+
+    def deco(factory: Callable[..., Attack]) -> Callable[..., Attack]:
+        _ATTACKS[name] = factory
+        return factory
+
+    return deco
+
+
+def available_attacks() -> tuple[str, ...]:
+    return tuple(sorted(_ATTACKS))
+
+
+def make_attack(name: str, **kw) -> Attack:
+    """Instantiate attack ``name`` with hyper-parameters ``kw``."""
+    try:
+        factory = _ATTACKS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown attack {name!r}; available: {available_attacks()}"
+        ) from None
+    return factory(**kw)
+
+
+# --- adversary placement ----------------------------------------------------------
+
+def adversary_mask(fleet: DeviceFleet, adv_frac: float,
+                   rho_adv: float = 0.0, *, seed: int = 0) -> np.ndarray:
+    """(N,) boolean adversary mask with rank-coupled placement.
+
+    ``round(adv_frac * N)`` devices are compromised.  ``rho_adv`` blends a
+    seeded random placement (``rho_adv = 0``) with full rank matching:
+    ``rho_adv = +1`` compromises the *strongest* devices (highest composite
+    capability rank — the ones censoring never removes), ``rho_adv = -1``
+    the weakest.  Deterministic in ``(fleet, adv_frac, rho_adv, seed)``, so
+    engines can bake the mask into memoized round programs.
+    """
+    n = len(np.asarray(fleet.compute_s))
+    if not 0.0 <= adv_frac < 1.0:
+        raise ValueError(f"adv_frac={adv_frac} must be in [0, 1)")
+    if not -1.0 <= rho_adv <= 1.0:
+        raise ValueError(f"rho_adv={rho_adv} must be in [-1, 1]")
+    n_adv = int(round(adv_frac * n))
+    mask = np.zeros(n, dtype=bool)
+    if n_adv == 0:
+        return mask
+    rng = np.random.default_rng(np.uint32(seed) ^ np.uint32(ATTACK_STREAM))
+    rand_rank = _ranks(rng.permutation(n).astype(np.float64))
+    cap = capability_rank(fleet)
+    target = cap if rho_adv >= 0.0 else (n - 1) - cap
+    score = (1.0 - abs(rho_adv)) * rand_rank + abs(rho_adv) * target
+    # highest blended score = compromised; stable argsort resolves ties
+    # toward lower device index, keeping the mask reproducible
+    order = np.argsort(-score, kind="stable")
+    mask[order[:n_adv]] = True
+    return mask
+
+
+# --- built-in attacks -------------------------------------------------------------
+
+def _bcast(adversary: jax.Array, leaf: jax.Array) -> jax.Array:
+    """Broadcast the (N,) mask to the leading axis of a client-major leaf."""
+    return adversary.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+def _poison_identity(data: Any, adversary: jax.Array) -> Any:
+    return data
+
+
+def _flip_labels(data: Any, adversary: jax.Array,
+                 n_classes: int) -> Any:
+    """Flip the ``y`` leaves of a client-major batch pytree for adversaries.
+
+    Integer labels map ``y -> n_classes - 1 - y`` (the deterministic flip of
+    McMahan-style label-flipping); inexact (regression) targets negate.
+    Dtype dispatch is a Python-level branch — static at trace time — so the
+    zero-adversary program is unchanged.
+    """
+
+    def flip(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        if not names or names[-1] != "y":
+            return leaf
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            flipped = (n_classes - 1 - leaf).astype(leaf.dtype)
+        else:
+            flipped = (-leaf).astype(leaf.dtype)
+        adv = _bcast(adversary, leaf) > 0
+        return jnp.where(adv, flipped, leaf)
+
+    return jax.tree_util.tree_map_with_path(flip, data)
+
+
+@register_attack("label_flip")
+def _label_flip(*, n_classes: int = 10) -> Attack:
+    return Attack(
+        name="label_flip",
+        poison=lambda data, adv: _flip_labels(data, adv, n_classes),
+        transform=lambda w, theta, adv, key: w,
+        params={"n_classes": n_classes},
+    )
+
+
+@register_attack("scale_update")
+def _scale_update(*, boost: float = 10.0) -> Attack:
+    if boost <= 0.0 or not math.isfinite(boost):
+        raise ValueError(f"boost={boost} must be finite and > 0")
+
+    def transform(w, theta, adv, key):
+        t = theta.astype(w.dtype)[None, :]
+        boosted = t + jnp.asarray(boost, w.dtype) * (w - t)
+        return jnp.where(_bcast(adv, w) > 0, boosted, w)
+
+    return Attack(name="scale_update", poison=_poison_identity,
+                  transform=transform, params={"boost": boost})
+
+
+@register_attack("sign_flip")
+def _sign_flip() -> Attack:
+    def transform(w, theta, adv, key):
+        t = theta.astype(w.dtype)[None, :]
+        reflected = t + (t - w)
+        return jnp.where(_bcast(adv, w) > 0, reflected, w)
+
+    return Attack(name="sign_flip", poison=_poison_identity,
+                  transform=transform, params={})
+
+
+@register_attack("gaussian_noise")
+def _gaussian_noise(*, sigma: float = 1.0) -> Attack:
+    if sigma < 0.0 or not math.isfinite(sigma):
+        raise ValueError(f"sigma={sigma} must be finite and >= 0")
+
+    def transform(w, theta, adv, key):
+        noise = jnp.asarray(sigma, w.dtype) * jax.random.normal(
+            key, w.shape, w.dtype)
+        return jnp.where(_bcast(adv, w) > 0, w + noise, w)
+
+    return Attack(name="gaussian_noise", poison=_poison_identity,
+                  transform=transform, params={"sigma": sigma})

@@ -1,0 +1,374 @@
+"""Adversarial & privacy tier: the attack registry, adversary placement,
+the zero-adversary differential contract on all four engines, the quarantine
+metrics, the DP client path, and the eager Federation validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sim
+from repro.core import coalitions, instrument, strategies
+from repro.core import fused as fused_mod
+from repro.core.client import ClientConfig, client_update
+from repro.core.server import Federation, FederationConfig
+from repro.obs import metrics, privacy
+from repro.sim.scenarios import capability_rank
+
+pytestmark = pytest.mark.adversarial
+
+N_CLIENTS, N_LOCAL, DIM = 6, 20, 12
+
+
+@pytest.fixture(scope="module")
+def lsq():
+    """Tiny least-squares federation problem (fast to compile)."""
+    kx, kw, kt = jax.random.split(jax.random.key(0), 3)
+    x = jax.random.normal(kx, (N_CLIENTS, N_LOCAL, DIM))
+    w_true = jax.random.normal(kw, (DIM,))
+    y = x @ w_true + 0.1 * jax.random.normal(kt, (N_CLIENTS, N_LOCAL))
+
+    def loss_fn(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    xe = x.reshape(-1, DIM)[:40]
+    ye = (x @ w_true).reshape(-1)[:40]
+    eval_fn = lambda p: -jnp.mean((xe @ p["w"] - ye) ** 2)
+    return loss_fn, eval_fn, {"x": x, "y": y}, {"w": jnp.zeros((DIM,))}
+
+
+def _cfg(method="coalition", rounds=3, engine="scan", **kw):
+    return FederationConfig(
+        n_clients=N_CLIENTS, n_coalitions=2, rounds=rounds, method=method,
+        client=ClientConfig(epochs=1, batch_size=10, lr=0.01),
+        engine=engine, sim=sim.SimConfig(), **kw)
+
+
+def _rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+# --- registry ---------------------------------------------------------------------
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        for name in ("label_flip", "scale_update", "sign_flip",
+                     "gaussian_noise"):
+            assert name in sim.available_attacks()
+
+    def test_unknown_attack_lists_options(self):
+        with pytest.raises(ValueError, match="unknown attack"):
+            sim.make_attack("telepathy")
+
+    def test_hyperparams_validated(self):
+        with pytest.raises(ValueError, match="boost"):
+            sim.make_attack("scale_update", boost=0.0)
+        with pytest.raises(ValueError, match="sigma"):
+            sim.make_attack("gaussian_noise", sigma=-1.0)
+
+    def test_register_roundtrip(self):
+        @sim.register_attack("_test_attack")
+        def _factory() -> sim.Attack:
+            return sim.make_attack("sign_flip")._replace(name="_test_attack")
+
+        try:
+            assert sim.make_attack("_test_attack").name == "_test_attack"
+        finally:
+            from repro.sim import attacks as attacks_mod
+            del attacks_mod._ATTACKS["_test_attack"]
+
+
+# --- adversary placement ----------------------------------------------------------
+
+class TestAdversaryMask:
+    def test_deterministic_and_counted(self):
+        fleet = sim.make_fleet("cellular-flaky", 20, seed=3)
+        a = sim.adversary_mask(fleet, 0.25, 0.5, seed=7)
+        b = sim.adversary_mask(fleet, 0.25, 0.5, seed=7)
+        np.testing.assert_array_equal(a, b)
+        assert a.sum() == round(0.25 * 20)
+        assert a.dtype == bool and a.shape == (20,)
+
+    def test_rank_matching_extremes(self):
+        """rho_adv=+1 compromises the strongest devices, -1 the weakest."""
+        fleet = sim.make_fleet("lognormal-edge", 16, seed=0)
+        rank = capability_rank(fleet)
+        strong = sim.adversary_mask(fleet, 0.25, 1.0)
+        weak = sim.adversary_mask(fleet, 0.25, -1.0)
+        assert set(np.flatnonzero(strong)) == set(np.argsort(-rank)[:4])
+        assert set(np.flatnonzero(weak)) == set(np.argsort(rank)[:4])
+        assert not np.array_equal(strong, weak)
+
+    def test_zero_frac_is_empty(self):
+        fleet = sim.make_fleet("ideal", 8)
+        assert not sim.adversary_mask(fleet, 0.0).any()
+
+    def test_validation(self):
+        fleet = sim.make_fleet("ideal", 8)
+        with pytest.raises(ValueError, match="adv_frac"):
+            sim.adversary_mask(fleet, 1.0)
+        with pytest.raises(ValueError, match="rho_adv"):
+            sim.adversary_mask(fleet, 0.5, 2.0)
+
+
+# --- transform/poison numpy parity ------------------------------------------------
+
+class TestTransforms:
+    def setup_method(self):
+        self.w = _rand((6, 9), seed=1)
+        self.theta = _rand((9,), seed=2)
+        self.adv = jnp.asarray([1, 0, 0, 1, 0, 0], jnp.float32)
+        self.key = jax.random.key(5)
+
+    def _check(self, got, want_adv_rows):
+        """Adversary rows match the numpy reference; honest rows bitwise w."""
+        got = np.asarray(got)
+        adv = np.asarray(self.adv) > 0
+        np.testing.assert_array_equal(got[~adv], np.asarray(self.w)[~adv])
+        np.testing.assert_allclose(got[adv], want_adv_rows[adv],
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_scale_update(self):
+        atk = sim.make_attack("scale_update", boost=7.0)
+        w, t = np.asarray(self.w), np.asarray(self.theta)[None, :]
+        self._check(atk.transform(self.w, self.theta, self.adv, self.key),
+                    t + 7.0 * (w - t))
+
+    def test_sign_flip(self):
+        atk = sim.make_attack("sign_flip")
+        w, t = np.asarray(self.w), np.asarray(self.theta)[None, :]
+        self._check(atk.transform(self.w, self.theta, self.adv, self.key),
+                    2.0 * t - w)
+
+    def test_gaussian_noise(self):
+        atk = sim.make_attack("gaussian_noise", sigma=0.5)
+        noise = 0.5 * np.asarray(
+            jax.random.normal(self.key, self.w.shape, self.w.dtype))
+        self._check(atk.transform(self.w, self.theta, self.adv, self.key),
+                    np.asarray(self.w) + noise)
+
+    def test_label_flip_poison(self):
+        atk = sim.make_attack("label_flip", n_classes=10)
+        data = {"x": self.w, "y": jnp.arange(6, dtype=jnp.int32)}
+        out = atk.poison(data, self.adv)
+        np.testing.assert_array_equal(out["x"], data["x"])   # x untouched
+        np.testing.assert_array_equal(
+            np.asarray(out["y"]), [9, 1, 2, 6, 4, 5])
+        assert out["y"].dtype == data["y"].dtype
+
+    def test_label_flip_regression_targets_negate(self):
+        atk = sim.make_attack("label_flip")
+        y = _rand((6, 3), seed=4)
+        out = atk.poison({"y": y}, self.adv)["y"]
+        adv = np.asarray(self.adv) > 0
+        np.testing.assert_array_equal(np.asarray(out)[adv],
+                                      -np.asarray(y)[adv])
+        np.testing.assert_array_equal(np.asarray(out)[~adv],
+                                      np.asarray(y)[~adv])
+
+    def test_label_flip_transform_is_identity(self):
+        atk = sim.make_attack("label_flip")
+        got = atk.transform(self.w, self.theta, self.adv, self.key)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(self.w))
+
+
+# --- the zero-adversary differential contract -------------------------------------
+
+class TestZeroAdversaryIdentity:
+    @pytest.mark.parametrize("engine", ["scan", "python", "semi_async",
+                                        "event_driven"])
+    @pytest.mark.parametrize("method", sorted(strategies._STRATEGIES))
+    def test_bitwise_identity(self, lsq, engine, method):
+        """attack configured + adv_frac=0 => bit-for-bit the clean run.
+
+        The attack hooks gate through jnp.where on the adversary mask, so
+        the attacked program *is* the clean program when the mask is zero —
+        the full engine × strategy matrix, not just the paths that
+        re-trace per round.
+        """
+        loss_fn, eval_fn, cd, params = lsq
+        key = jax.random.key(2)
+        clean = Federation(loss_fn, eval_fn, _cfg(method=method,
+                                                  engine=engine))
+        attacked = Federation(
+            loss_fn, eval_fn, _cfg(method=method, engine=engine,
+                                   adv_frac=0.0),
+            attack=sim.make_attack("scale_update", boost=100.0))
+        gp0, h0 = clean.run(params, cd, key)
+        gp1, h1 = attacked.run(params, cd, key)
+        np.testing.assert_array_equal(np.asarray(gp0["w"]),
+                                      np.asarray(gp1["w"]))
+        assert h0.test_acc == h1.test_acc
+        # and the attacked run still carries the (all-zero) telemetry
+        assert h1.adversary is not None and not np.any(h1.adversary)
+        assert h1.quarantine == [0.0] * len(h1.quarantine)
+        assert h0.adversary is None
+
+
+# --- quarantine metrics -----------------------------------------------------------
+
+class TestQuarantineMetrics:
+    def test_quarantine_fraction_cases(self):
+        assign = jnp.asarray([0, 0, 1, 1, 2, 2])
+        none = jnp.zeros((6,))
+        assert float(metrics.quarantine_fraction(assign, none, 3)) == 0.0
+        quarantined = jnp.asarray([1, 1, 0, 0, 0, 0], jnp.float32)
+        assert float(metrics.quarantine_fraction(assign, quarantined,
+                                                 3)) == 0.0
+        embedded = jnp.asarray([1, 0, 1, 0, 0, 0], jnp.float32)
+        assert float(metrics.quarantine_fraction(assign, embedded, 3)) == 1.0
+        # clients 0,1 quarantined together; client 4 embedded with client 5
+        partial = jnp.asarray([1, 1, 0, 0, 1, 0], jnp.float32)
+        np.testing.assert_allclose(
+            float(metrics.quarantine_fraction(assign, partial, 3)), 1.0 / 3.0,
+            rtol=1e-6)
+
+    def test_contamination_zero_iff_pure(self):
+        assign = jnp.asarray([0, 0, 1, 1])
+        d2 = jnp.full((4, 2), 4.0)
+        quarantined = jnp.asarray([1, 1, 0, 0], jnp.float32)
+        assert float(metrics.contamination(d2, assign, quarantined, 2)) == 0.0
+        embedded = jnp.asarray([1, 0, 0, 0], jnp.float32)
+        # coalition 0: a=1, h=1, rms=2 -> bound 2; honest-mass-weighted by
+        # h=[1,2] over h_total=3 -> 2/3
+        np.testing.assert_allclose(
+            float(metrics.contamination(d2, assign, embedded, 2)), 2.0 / 3.0,
+            rtol=1e-6)
+
+    def test_quarantine_regression_scale_attack(self, lsq):
+        """The tentpole experiment: a boosted scale attack lands its two
+        adversaries in an attackers-only coalition within six rounds, and
+        the honest barycenters stay uncontaminated."""
+        n, k = 10, 3
+        kx, kw, kt = jax.random.split(jax.random.key(0), 3)
+        x = jax.random.normal(kx, (n, 12, 8))
+        w_true = jax.random.normal(kw, (8,))
+        y = x @ w_true + 0.1 * jax.random.normal(kt, (n, 12))
+        xe, ye = x.reshape(-1, 8)[:60], (x @ w_true).reshape(-1)[:60]
+        cfg = FederationConfig(
+            n_clients=n, n_coalitions=k, rounds=6, method="coalition",
+            client=ClientConfig(epochs=1, batch_size=6, lr=0.05),
+            adv_frac=0.2, sim=sim.SimConfig(seed=0))
+        fed = Federation(
+            lambda p, b: jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2),
+            lambda p: -jnp.mean((xe @ p["w"] - ye) ** 2), cfg,
+            attack=sim.make_attack("scale_update", boost=100.0))
+        _, hist = fed.run({"w": jnp.zeros((8,))}, {"x": x, "y": y},
+                          jax.random.key(1))
+        assert int(np.asarray(hist.adversary[-1]).sum()) == 2
+        assert hist.quarantine[-1] == 0.0
+        assert hist.contamination[-1] == 0.0
+
+    def test_fused_round_with_metrics_stays_two_pass(self):
+        """Quarantine + contamination ride the (N, K) med_d2 the medoid
+        election already materialized: the fused round program that also
+        emits both metrics still reads W exactly twice."""
+        w = _rand((10, 4096), seed=0)
+        state = coalitions.init_centers(jax.random.key(1), w, 3)
+        adv = jnp.zeros((10,), jnp.float32).at[0].set(1.0)
+
+        def round_with_metrics(w_):
+            r = coalitions.run_round(w_, state, fused=True)
+            return (r.theta,
+                    metrics.quarantine_fraction(r.assignment, adv, 3),
+                    metrics.contamination(r.med_d2, r.assignment, adv, 3))
+
+        with instrument.count_w_passes() as passes:
+            jax.make_jaxpr(round_with_metrics)(w)
+        assert passes() == 2
+
+
+# --- differential privacy ---------------------------------------------------------
+
+class TestDifferentialPrivacy:
+    def _data(self):
+        return {"x": _rand((20, 4), seed=0), "y": _rand((20,), seed=1)}
+
+    @staticmethod
+    def _loss(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    def test_defaults_bitwise_identity(self):
+        """clip=inf + sigma=0 traces the very same non-DP program."""
+        params = {"w": jnp.zeros((4,))}
+        key = jax.random.key(3)
+        base = client_update(self._loss, params, self._data(), key,
+                             ClientConfig(epochs=2, batch_size=5))
+        dp = client_update(self._loss, params, self._data(), key,
+                           ClientConfig(epochs=2, batch_size=5,
+                                        dp_clip=float("inf"), dp_sigma=0.0))
+        np.testing.assert_array_equal(np.asarray(base[0]["w"]),
+                                      np.asarray(dp[0]["w"]))
+
+    def test_clip_bounds_update_norm(self):
+        params = {"w": jnp.zeros((4,))}
+        clip = 1e-3
+        new, _ = client_update(
+            self._loss, params, self._data(), jax.random.key(3),
+            ClientConfig(epochs=2, batch_size=5, lr=0.5, dp_clip=clip))
+        norm = float(jnp.linalg.norm(new["w"] - params["w"]))
+        assert norm <= clip * (1 + 1e-5)
+
+    def test_noise_is_keyed_and_scaled(self):
+        params = {"w": jnp.zeros((4,))}
+        cfg = ClientConfig(epochs=1, batch_size=5, dp_clip=1.0, dp_sigma=0.7)
+        a, _ = client_update(self._loss, params, self._data(),
+                             jax.random.key(3), cfg)
+        b, _ = client_update(self._loss, params, self._data(),
+                             jax.random.key(3), cfg)
+        c, _ = client_update(self._loss, params, self._data(),
+                             jax.random.key(4), cfg)
+        np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+        assert not np.array_equal(np.asarray(a["w"]), np.asarray(c["w"]))
+
+    def test_epsilon_accounting(self):
+        eps = privacy.gaussian_epsilon(0.8, 10)
+        assert np.isfinite(eps) and eps > 0
+        # more noise -> tighter epsilon; more rounds -> looser
+        assert privacy.gaussian_epsilon(2.0, 10) < eps
+        assert privacy.gaussian_epsilon(0.8, 100) > eps
+        # subsampling amplification: q < 1 tightens
+        assert privacy.gaussian_epsilon(0.8, 10, q=0.1) < eps
+        assert privacy.gaussian_epsilon(0.0, 10) == float("inf")
+        assert privacy.gaussian_epsilon(0.8, 0) == 0.0
+
+    def test_epsilon_validation(self):
+        with pytest.raises(ValueError):
+            privacy.gaussian_epsilon(-1.0, 10)
+        with pytest.raises(ValueError):
+            privacy.gaussian_epsilon(0.8, 10, q=2.0)
+
+
+# --- eager Federation validation --------------------------------------------------
+
+class TestEagerValidation:
+    def test_unknown_attack_name(self, lsq):
+        loss_fn, eval_fn, _, _ = lsq
+        with pytest.raises(ValueError, match="unknown attack"):
+            Federation(loss_fn, eval_fn, _cfg(attack="nope"))
+
+    def test_adv_frac_requires_attack(self, lsq):
+        loss_fn, eval_fn, _, _ = lsq
+        with pytest.raises(ValueError, match="requires an attack"):
+            Federation(loss_fn, eval_fn, _cfg(adv_frac=0.5))
+
+    def test_adv_frac_range(self, lsq):
+        loss_fn, eval_fn, _, _ = lsq
+        with pytest.raises(ValueError, match="adv_frac"):
+            Federation(loss_fn, eval_fn,
+                       _cfg(attack="sign_flip", adv_frac=-0.1))
+
+    def test_rho_adv_range(self, lsq):
+        loss_fn, eval_fn, _, _ = lsq
+        with pytest.raises(ValueError, match="rho_adv"):
+            Federation(loss_fn, eval_fn,
+                       _cfg(attack="sign_flip", adv_frac=0.3, rho_adv=1.5))
+
+    def test_dp_config_validated(self, lsq):
+        loss_fn, eval_fn, _, _ = lsq
+        cfg = _cfg()._replace(client=ClientConfig(dp_sigma=-1.0))
+        with pytest.raises(ValueError, match="dp_sigma"):
+            Federation(loss_fn, eval_fn, cfg)
+        cfg = _cfg()._replace(client=ClientConfig(dp_clip=0.0))
+        with pytest.raises(ValueError, match="dp_clip"):
+            Federation(loss_fn, eval_fn, cfg)

@@ -28,8 +28,8 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro import sim
-from repro.core import coalitions, strategies
-from repro.core.client import ClientConfig
+from repro.core import aggregation, coalitions, strategies
+from repro.core.client import ClientConfig, client_update
 from repro.core.coalitions import CoalitionState
 from repro.core.server import Federation, FederationConfig
 
@@ -214,6 +214,111 @@ def _engine_problem(method: str):
         eval_fn = lambda p: -jnp.sum(p["w"] ** 2)
         _ENGINE_FEDS[method] = (Federation(loss_fn, eval_fn, cfg), n, l, d)
     return _ENGINE_FEDS[method]
+
+
+class TestTrimmedRobustness:
+    @given(seed=st.integers(0, 10_000), n_adv=st.integers(0, 2))
+    @settings(max_examples=10, deadline=None)
+    def test_theta_bounded_by_honest_hull(self, seed, n_adv):
+        """With at most ``trim`` arbitrarily-corrupted rows, the trimmed
+        mean stays inside the per-coordinate honest envelope: any value an
+        adversary pushes past the honest extremes lands in the trimmed
+        ranks.  This is the robustness certificate the scale/sign attacks
+        probe empirically in the benchmark."""
+        trim = 2
+        w = np.asarray(_rand_w(seed, n=9))
+        rng = np.random.default_rng(seed + 7)
+        adv_idx = rng.choice(9, size=n_adv, replace=False)
+        corrupted = w.copy()
+        corrupted[adv_idx] = 1e6 * rng.standard_normal((n_adv, D))
+        honest = np.delete(w, adv_idx, axis=0)
+        theta = np.asarray(aggregation.trimmed_mean_masked(
+            jnp.asarray(corrupted), trim, jnp.ones((9,), jnp.float32)))
+        eps = 1e-4
+        assert (theta >= honest.min(axis=0) - eps).all()
+        assert (theta <= honest.max(axis=0) + eps).all()
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_masked_theta_bounded_by_present_honest_hull(self, seed):
+        """Same certificate on a partial cohort: absent rows never occupy
+        trim slots, so the bound holds over the present honest rows."""
+        trim, n = 1, 8
+        w = np.asarray(_rand_w(seed, n=n))
+        rng = np.random.default_rng(seed + 11)
+        present = np.zeros(n, bool)
+        present[rng.choice(n, size=5, replace=False)] = True
+        adv = rng.choice(np.flatnonzero(present))
+        corrupted = w.copy()
+        corrupted[adv] = 1e6
+        ref = np.delete(w[present], np.flatnonzero(
+            np.flatnonzero(present) == adv), axis=0)
+        theta = np.asarray(aggregation.trimmed_mean_masked(
+            jnp.asarray(corrupted), trim,
+            jnp.asarray(present, jnp.float32)))
+        eps = 1e-4
+        assert (theta >= ref.min(axis=0) - eps).all()
+        assert (theta <= ref.max(axis=0) + eps).all()
+
+
+class TestAttackEquivariance:
+    @pytest.mark.parametrize("name", ["scale_update", "sign_flip"])
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=5, deadline=None)
+    def test_transform_commutes_with_permutation(self, name, seed):
+        """Relabelling clients and attacking commute (deterministic
+        attacks): no client is special by position, so the adversary mask
+        travels with its row."""
+        atk = sim.make_attack(name)
+        w = _rand_w(seed)
+        theta = _rand_w(seed + 1, n=1)[0]
+        rng = np.random.default_rng(seed + 2)
+        adv = jnp.asarray((rng.random(N) < 0.4).astype(np.float32))
+        perm = jnp.asarray(rng.permutation(N))
+        key = jax.random.key(seed)
+        out = atk.transform(w, theta, adv, key)
+        out_p = atk.transform(w[perm], theta, adv[perm], key)
+        np.testing.assert_array_equal(np.asarray(out_p),
+                                      np.asarray(out)[np.asarray(perm)])
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=5, deadline=None)
+    def test_poison_commutes_with_permutation(self, seed):
+        atk = sim.make_attack("label_flip", n_classes=7)
+        rng = np.random.default_rng(seed)
+        data = {"x": _rand_w(seed),
+                "y": jnp.asarray(rng.integers(0, 7, N), jnp.int32)}
+        adv = jnp.asarray((rng.random(N) < 0.4).astype(np.float32))
+        perm = np.asarray(rng.permutation(N))
+        out = atk.poison(data, adv)
+        out_p = atk.poison(jax.tree.map(lambda l: l[jnp.asarray(perm)], data),
+                           adv[jnp.asarray(perm)])
+        for leaf, leaf_p in zip(jax.tree.leaves(out), jax.tree.leaves(out_p)):
+            np.testing.assert_array_equal(np.asarray(leaf_p),
+                                          np.asarray(leaf)[perm])
+
+
+class TestDPIdentityWhenOff:
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=5, deadline=None)
+    def test_default_knobs_trace_the_non_dp_program(self, seed):
+        """clip=inf + sigma=0 is a static Python branch: the client update
+        is bit-for-bit the non-DP one for arbitrary data and keys."""
+        rng = np.random.default_rng(seed)
+        data = {"x": jnp.asarray(rng.standard_normal((20, 4)), jnp.float32),
+                "y": jnp.asarray(rng.standard_normal(20), jnp.float32)}
+        params = {"w": jnp.asarray(rng.standard_normal(4), jnp.float32)}
+        loss = lambda p, b: jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+        key = jax.random.key(seed)
+        base = client_update(loss, params, data, key,
+                             ClientConfig(epochs=2, batch_size=6, lr=0.1))
+        off = client_update(loss, params, data, key,
+                            ClientConfig(epochs=2, batch_size=6, lr=0.1,
+                                         dp_clip=float("inf"), dp_sigma=0.0))
+        np.testing.assert_array_equal(np.asarray(base[0]["w"]),
+                                      np.asarray(off[0]["w"]))
+        np.testing.assert_array_equal(np.asarray(base[1]),
+                                      np.asarray(off[1]))
 
 
 class TestEngineEquivalence:

@@ -124,6 +124,38 @@ class TestStrategyEquivalence:
         with pytest.raises(ValueError, match="trim"):
             aggregation.trimmed_mean(w, 4)
 
+    def test_trimmed_mean_masked_trims_effective_participants(self):
+        """Regression: the trim budget must run over *delivered* rows.
+
+        Trimming against the unmasked row count let absent clients' rows
+        occupy trim slots — with 3 of 7 rows absent and trim=2, an
+        adversarial outlier among the 4 present rows survived the trim.
+        The masked rule clamps trim to the effective count and sorts absent
+        rows out of the window entirely.
+        """
+        w = _rand_w(7, 33, seed=6)
+        mask = jnp.asarray([1, 1, 1, 1, 0, 0, 0], jnp.float32)
+        poisoned = w.at[0].set(1e6)          # present outlier
+        got = np.asarray(aggregation.trimmed_mean_masked(poisoned, 2, mask))
+        # trim clamps to (4-1)//2 = 1: the 1e6 row is discarded, and the
+        # reference is the numpy trimmed mean over the present rows only
+        ws = np.sort(np.asarray(poisoned)[:4], axis=0)
+        np.testing.assert_allclose(got, ws[1:-1].mean(0), rtol=1e-5)
+        assert np.abs(got).max() < 1e3
+
+    def test_trimmed_mean_masked_all_present_matches_unmasked(self):
+        w = _rand_w(7, 33, seed=8)
+        np.testing.assert_allclose(
+            np.asarray(aggregation.trimmed_mean_masked(
+                w, 2, jnp.ones((7,), jnp.float32))),
+            np.asarray(aggregation.trimmed_mean(w, 2)), rtol=1e-6, atol=1e-7)
+
+    def test_trimmed_mean_masked_all_absent_is_zero(self):
+        w = _rand_w(5, 9, seed=9)
+        got = aggregation.trimmed_mean_masked(w, 1,
+                                              jnp.zeros((5,), jnp.float32))
+        np.testing.assert_array_equal(np.asarray(got), 0.0)
+
     def test_strategy_validation(self):
         with pytest.raises(ValueError, match="top_m"):
             strategies.make_strategy("coalition_topk", n_clients=10,
